@@ -1,0 +1,65 @@
+"""Beyond-paper ablations on the server update:
+
+1. Two step-sizes (the paper's Thm-I analysis device): eta_g > 1 with
+   eta_l scaled down ~1/eta_g reduces client drift at equal effective
+   step — FedAvg improves, SCAFFOLD barely changes (its drift is already
+   corrected).
+2. Server heavy-ball momentum (FedAvgM-style) under client sampling:
+   smooths the sampling variance of the aggregated update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import make_similarity_quadratics, quadratic_loss
+
+
+def _run(spec, ds, rounds=80, seed=0):
+    init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed)
+    for _ in range(rounds):
+        tr.run_round()
+    return ds.suboptimality(tr.x)
+
+
+def run(fast: bool = True):
+    ds = make_similarity_quadratics(20, 10, delta=0.3, G=8.0, mu=0.3, seed=3)
+    rows = []
+    base = dict(num_clients=20, num_sampled=4, local_steps=10, local_batch=1)
+    s = 4
+    for algo in ("fedavg", "scaffold"):
+        for eta_g, eta_l in [(1.0, 0.1), (np.sqrt(s), 0.1 / np.sqrt(s))]:
+            spec = FedRoundSpec(algorithm=algo, eta_l=eta_l, eta_g=eta_g,
+                                **base)
+            sub = _run(spec, ds)
+            rows.append({"ablation": "two_stepsizes", "algo": algo,
+                         "eta_g": round(eta_g, 2), "suboptimality": sub})
+    for algo in ("fedavg", "scaffold"):
+        for beta in (0.0, 0.8):
+            spec = FedRoundSpec(algorithm=algo, eta_l=0.1,
+                                eta_g=(1 - beta), server_momentum=beta,
+                                **base)
+            sub = _run(spec, ds)
+            rows.append({"ablation": "server_momentum", "algo": algo,
+                         "beta": beta, "suboptimality": sub})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast)
+    print("ablation: server update variants (suboptimality after 80 rounds,"
+          " 20% sampling, K=10, G=8)")
+    for r in rows:
+        knob = f"eta_g={r['eta_g']}" if "eta_g" in r else f"beta={r['beta']}"
+        print(f"  {r['ablation']:16s} {r['algo']:9s} {knob:12s} "
+              f"subopt={r['suboptimality']:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Microbenchmark: wall time per federated round (reduced LM archs, CPU).
+Emits the us_per_call numbers for benchmarks.run's CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.configs.base import FedRoundSpec
+from repro.core import federated_round, make_grad_fn
+from repro.core.tree import tree_zeros_like
+from repro.models import init_params, loss_fn
+
+ARCHS = ("llama3.2-3b", "gemma3-1b", "mamba2-2.7b", "qwen2-moe-a2.7b",
+         "hymba-1.5b")
+
+
+def bench_arch(arch: str, *, algo: str = "scaffold", iters: int = 5):
+    cfg = get_reduced(arch)
+    spec = FedRoundSpec(algorithm=algo, num_clients=8, num_sampled=4,
+                        local_steps=4, local_batch=2, eta_l=0.01)
+    params = init_params(cfg, jax.random.key(0))
+    grad_fn = make_grad_fn(lambda p, b: loss_fn(cfg, p, b))
+    c = tree_zeros_like(params)
+    c_i = jax.tree.map(lambda a: jnp.zeros((4,) + a.shape, a.dtype), params)
+    tokens = jax.random.randint(jax.random.key(1), (4, 4, 2, 128), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    fn = jax.jit(lambda *a: federated_round(grad_fn, spec, *a))
+    out = fn(params, c, c_i, batch)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(params, c, c_i, batch)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / iters
+    return dt * 1e6  # us per round
+
+
+def main():
+    rows = []
+    for arch in ARCHS:
+        us = bench_arch(arch)
+        rows.append({"arch": arch, "us_per_round": us})
+        print(f"round_{arch}: {us/1e3:.1f} ms/round (reduced cfg, CPU)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

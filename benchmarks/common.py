@@ -1,0 +1,76 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import EmnistLikeFederated
+from repro.models.simple import (
+    logreg_init,
+    logreg_logits,
+    logreg_loss,
+    mlp_init,
+    mlp_logits,
+    mlp_loss,
+)
+
+MODELS = {
+    "logreg": (logreg_init, logreg_loss, logreg_logits),
+    "mlp": (mlp_init, mlp_loss, mlp_logits),
+}
+
+
+def make_emnist(num_clients: int, samples: int, similarity: float, seed: int = 0):
+    return EmnistLikeFederated(num_clients=num_clients, samples=samples,
+                               similarity_pct=similarity, seed=seed)
+
+
+def rounds_to_target(data, algo: str, *, K: int, eta: float, target: float,
+                     num_clients: int, num_sampled: int, local_batch: int,
+                     max_rounds: int, model: str = "logreg",
+                     seed: int = 0, eval_every: int = 2) -> int:
+    init_fn, loss_fn, logits_fn = MODELS[model]
+    spec = FedRoundSpec(algorithm=algo, num_clients=num_clients,
+                        num_sampled=num_sampled, local_steps=K,
+                        local_batch=local_batch, eta_l=eta)
+    tr = FederatedTrainer(loss_fn, lambda k: init_fn(k, 784, 62), spec, data,
+                          seed=seed)
+    tb = data.test_batch()
+    acc_fn = jax.jit(
+        lambda p: jnp.mean(jnp.argmax(logits_fn(p, tb), -1) == tb["y"]))
+    for r in range(max_rounds):
+        tr.run_round()
+        if (r + 1) % eval_every == 0 and float(acc_fn(tr.x)) >= target:
+            return r + 1
+    return max_rounds + 1  # "max+" marker
+
+
+def best_rounds_over_etas(data, algo: str, etas, **kw) -> int:
+    """The paper tunes eta_l per algorithm — take the best over a grid."""
+    return min(rounds_to_target(data, algo, eta=e, **kw) for e in etas)
+
+
+def final_accuracy(data, algo: str, *, K: int, eta: float, num_clients: int,
+                   num_sampled: int, local_batch: int, rounds: int,
+                   model: str = "mlp", seed: int = 0) -> float:
+    init_fn, loss_fn, logits_fn = MODELS[model]
+    spec = FedRoundSpec(algorithm=algo, num_clients=num_clients,
+                        num_sampled=num_sampled, local_steps=K,
+                        local_batch=local_batch, eta_l=eta)
+    tr = FederatedTrainer(loss_fn, lambda k: init_fn(k, 784, 62), spec, data,
+                          seed=seed)
+    tb = data.test_batch()
+    acc_fn = jax.jit(
+        lambda p: jnp.mean(jnp.argmax(logits_fn(p, tb), -1) == tb["y"]))
+    best = 0.0
+    for r in range(rounds):
+        tr.run_round()
+        if (r + 1) % 5 == 0:
+            best = max(best, float(acc_fn(tr.x)))
+    return max(best, float(acc_fn(tr.x)))

@@ -1,0 +1,58 @@
+"""Roofline table: read the dry-run artifacts (experiments/dryrun/*.json)
+and render EXPERIMENTS.md §Roofline — the three terms per (arch × shape)
+on the single-pod mesh, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_row(r):
+    rf = r["roofline"]
+    mem_gb = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+    args_gb = r["memory"].get("argument_size_in_bytes", 0) / 1e9
+    frac = rf.get("useful_flops_frac")
+    frac_s = f"{frac:5.3f}" if frac is not None else "  n/a"
+    tag = r.get("tag", "")
+    name = r["arch"] + (f" [{tag}]" if tag else "")
+    return (
+        f"| {name:<24s} | {r['shape']:<11s} | {r['mesh']:<7s} "
+        f"| {rf['compute_term_s']:9.3e} | {rf['memory_term_s']:9.3e} "
+        f"| {rf['collective_term_s']:9.3e} | {rf['dominant']:<10s} "
+        f"| {frac_s} | {args_gb:6.1f} | {mem_gb:7.1f} |"
+    )
+
+
+def main(out_dir: str = "experiments/dryrun", mesh: str = None,
+         tag_filter: str = "", include_tags: bool = False):
+    rows = load(out_dir)
+    if mesh:
+        rows = [r for r in rows if r["mesh"] == mesh]
+    if not include_tags:
+        rows = [r for r in rows if r.get("tag", "") == tag_filter]
+    if not rows:
+        print(f"no dry-run artifacts in {out_dir} (run scripts/dryrun_all.sh)")
+        return []
+    print("| arch                     | shape       | mesh    | compute_s "
+          "| memory_s  | collect_s | dominant   | useful| args_GB| temp_GB |")
+    print("|" + "-" * 127 + "|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    for r in rows:
+        print(fmt_row(r))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(mesh=sys.argv[1] if len(sys.argv) > 1 else None)

@@ -1,0 +1,95 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (plus human-readable tables).
+``--full`` runs paper-scale settings; default is the fast CI-sized pass."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig3,table3,table4,table5,round,roofline")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    csv_rows = []
+
+    def emit(name, us, derived):
+        csv_rows.append(f"{name},{us:.0f},{derived}")
+
+    if only is None or "fig3" in only:
+        from benchmarks import fig3_quadratics
+
+        rows, us = _timed(fig3_quadratics.main, fast=fast)
+        sc = min(r["suboptimality"] for r in rows
+                 if r["algo"] == "scaffold" and r["G"] == 100.0)
+        fa = min(r["suboptimality"] for r in rows
+                 if r["algo"] == "fedavg" and r["G"] == 100.0)
+        emit("fig3_quadratics", us,
+             f"subopt_ratio_fedavg_over_scaffold={fa/max(sc,1e-30):.2e}")
+
+    if only is None or "table3" in only:
+        from benchmarks import table3_epochs
+
+        rows, us = _timed(table3_epochs.main, fast=fast)
+        sc = min(r["rounds"] for r in rows if r["algo"] == "scaffold")
+        fa = min(r["rounds"] for r in rows if r["algo"] == "fedavg")
+        emit("table3_epochs", us, f"best_rounds_scaffold={sc};fedavg={fa}")
+
+    if only is None or "table4" in only:
+        from benchmarks import table4_sampling
+
+        rows, us = _timed(table4_sampling.main, fast=fast)
+        worst = max(r["slowdown"] for r in rows if r["algo"] == "scaffold")
+        emit("table4_sampling", us,
+             f"scaffold_worst_sampling_slowdown={worst:.2f}x")
+
+    if only is None or "table5" in only:
+        from benchmarks import table5_nn
+
+        rows, us = _timed(table5_nn.main, fast=fast)
+        sc = max(r["accuracy"] for r in rows if r["algo"] == "scaffold")
+        emit("table5_nn", us, f"scaffold_best_mlp_acc={sc:.3f}")
+
+    if only is None or "ablation" in only:
+        from benchmarks import ablation_server
+
+        rows, us = _timed(ablation_server.main, fast=fast)
+        fa = [r for r in rows if r["ablation"] == "server_momentum"
+              and r["algo"] == "fedavg"]
+        gain = fa[0]["suboptimality"] / max(fa[1]["suboptimality"], 1e-30)
+        emit("ablation_server_momentum", us,
+             f"fedavgM_gain={gain:.2f}x_scaffold_unaffected")
+
+    if only is None or "round" in only:
+        from benchmarks import bench_round
+
+        rows, us = _timed(bench_round.main)
+        for r in rows:
+            emit(f"round_{r['arch']}", r["us_per_round"],
+                 "scaffold_round_reduced_cpu")
+
+    if only is None or "roofline" in only:
+        from benchmarks import roofline
+
+        rows, us = _timed(roofline.main, mesh="16x16")
+        emit("roofline_artifacts", us, f"n_combos={len(rows)}")
+
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for line in csv_rows:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Table 3 reproduction: communication rounds to target accuracy for
+logistic regression on the EMNIST-like task, varying local epochs ×
+client similarity. 1 epoch = 5 local steps (batch = 0.2 of local data),
+20% of clients sampled per round, eta_l tuned per algorithm (paper §7.1).
+"""
+from __future__ import annotations
+
+from benchmarks.common import best_rounds_over_etas, make_emnist
+
+ETAS = (0.3, 1.0, 3.0)
+
+
+def run(*, fast: bool = False, target: float = 0.5):
+    num_clients = 20 if fast else 50
+    samples = 8_000 if fast else 20_000
+    num_sampled = max(1, num_clients // 5)
+    epochs_list = (1, 5) if fast else (1, 5, 10)
+    sims = (0.0, 10.0) if fast else (0.0, 10.0, 100.0)
+    max_rounds = 80 if fast else 160
+    rows = []
+    for sim in sims:
+        data = make_emnist(num_clients, samples, sim)
+        lb = data.local_batch_size(0.2)
+        base = dict(num_clients=num_clients, num_sampled=num_sampled,
+                    local_batch=lb, target=target, max_rounds=max_rounds,
+                    model="logreg")
+        r_sgd = best_rounds_over_etas(data, "sgd", ETAS, K=1, **base)
+        for epochs in epochs_list:
+            K = 5 * epochs  # 5 steps per epoch (batch 0.2 of local data)
+            for algo in ("scaffold", "fedavg", "fedprox"):
+                r = best_rounds_over_etas(data, algo, ETAS, K=K, **base)
+                rows.append({
+                    "similarity": sim, "epochs": epochs, "algo": algo,
+                    "rounds": r, "speedup_vs_sgd": r_sgd / r,
+                    "sgd_rounds": r_sgd, "max_rounds": max_rounds,
+                })
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast=fast)
+    print("table3: rounds to target accuracy (speedup vs SGD in parens); "
+          f"'{rows[0]['max_rounds']+1}' means not reached")
+    sims = sorted({r["similarity"] for r in rows})
+    epochs = sorted({r["epochs"] for r in rows})
+    header = f"{'algo':>9s} {'ep':>3s} " + " ".join(
+        f"sim={s:<12.0f}" for s in sims)
+    print(header)
+    for algo in ("scaffold", "fedavg", "fedprox"):
+        for ep in epochs:
+            cells = []
+            for s in sims:
+                rr = [r for r in rows if r["algo"] == algo
+                      and r["epochs"] == ep and r["similarity"] == s]
+                r = rr[0]
+                cells.append(f"{r['rounds']:4d} ({r['speedup_vs_sgd']:4.1f}x)")
+            print(f"{algo:>9s} {ep:>3d} " + " ".join(f"{c:<16s}" for c in cells))
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,58 @@
+"""Table 4 reproduction: resilience to client sampling — rounds to target
+accuracy as the sampled fraction shrinks (20% -> 5%), at 0%/10%
+similarity. Expect sub-linear slow-down, better with higher similarity."""
+from __future__ import annotations
+
+from benchmarks.common import best_rounds_over_etas, make_emnist
+
+ETAS = (0.3, 1.0, 3.0)
+
+
+def run(*, fast: bool = False, target: float = 0.45):
+    num_clients = 20 if fast else 100
+    samples = 8_000 if fast else 20_000
+    fracs = (0.2, 0.05) if fast else (0.2, 0.05, 0.01)
+    sims = (0.0, 10.0)
+    max_rounds = 120 if fast else 400
+    rows = []
+    for sim in sims:
+        data = make_emnist(num_clients, samples, sim)
+        lb = data.local_batch_size(0.2)
+        for algo in ("scaffold", "fedavg"):
+            base_rounds = None
+            for frac in fracs:
+                s = max(1, int(num_clients * frac))
+                r = best_rounds_over_etas(
+                    data, algo, ETAS, K=25, target=target,
+                    num_clients=num_clients, num_sampled=s, local_batch=lb,
+                    max_rounds=max_rounds, model="logreg")
+                if base_rounds is None:
+                    base_rounds = r
+                rows.append({
+                    "similarity": sim, "algo": algo, "frac": frac,
+                    "sampled": s, "rounds": r,
+                    "slowdown": r / max(base_rounds, 1),
+                })
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(fast=fast)
+    print("table4: rounds to target vs sampled fraction (slowdown vs 20%)")
+    print(f"{'algo':>9s} {'frac':>5s} " + " ".join(
+        f"sim={s:<14.0f}" for s in (0.0, 10.0)))
+    fracs = sorted({r["frac"] for r in rows}, reverse=True)
+    for algo in ("scaffold", "fedavg"):
+        for frac in fracs:
+            cells = []
+            for sim in (0.0, 10.0):
+                rr = [r for r in rows if r["algo"] == algo
+                      and r["frac"] == frac and r["similarity"] == sim][0]
+                cells.append(f"{rr['rounds']:4d} ({rr['slowdown']:4.1f}x)")
+            print(f"{algo:>9s} {frac:>5.2f} "
+                  + " ".join(f"{c:<18s}" for c in cells))
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

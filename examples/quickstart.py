@@ -1,0 +1,43 @@
+"""Quickstart: SCAFFOLD vs FedAvg on heterogeneous clients in ~40 lines.
+
+Reproduces the paper's core claim on the Theorem-II quadratics: FedAvg
+stalls under client drift, SCAFFOLD converges linearly.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import make_paper_fig3, quadratic_loss
+
+
+def main():
+    G = 10.0  # gradient dissimilarity between the two clients
+    ds = make_paper_fig3(G=G)
+    print(f"2 heterogeneous quadratic clients, G={G}, 10 local steps/round\n")
+    for algo in ("fedavg", "scaffold"):
+        spec = FedRoundSpec(
+            algorithm=algo,
+            num_clients=2, num_sampled=2,  # full participation
+            local_steps=10, local_batch=1,
+            eta_l=0.1, eta_g=1.0,
+        )
+        trainer = FederatedTrainer(
+            loss_fn=quadratic_loss,
+            init_params=lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)},
+            spec=spec,
+            dataset=ds,
+        )
+        print(f"--- {algo} ---")
+        for r in range(50):
+            trainer.run_round()
+            if (r + 1) % 10 == 0:
+                print(f"  round {r+1:3d}  f(x) - f* = "
+                      f"{ds.suboptimality(trainer.x):.3e}")
+    print("\nSCAFFOLD's control variates cancel the client drift; FedAvg "
+          "plateaus at a G-dependent error floor (Theorem II).")
+
+
+if __name__ == "__main__":
+    main()

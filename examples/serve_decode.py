@@ -1,0 +1,17 @@
+"""Serving example: batched greedy decoding with KV/SSM caches across
+three architecture families (dense GQA, SWA+global, attention-free SSM).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as S
+
+
+def main():
+    for arch in ("llama3.2-3b", "gemma3-1b", "mamba2-2.7b"):
+        print(f"=== {arch} ===")
+        S.main(["--arch", arch, "--batch", "2", "--prompt-len", "8",
+                "--max-new", "16"])
+
+
+if __name__ == "__main__":
+    main()

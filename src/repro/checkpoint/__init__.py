@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    load_checkpoint,
+    load_trainer,
+    save_checkpoint,
+    save_trainer,
+)

@@ -1,0 +1,65 @@
+"""Checkpointing: server state (x, c) + the full per-client control-variate
+store + sampler round counter, as flat .npz archives (offline-friendly).
+
+Pytree structure is recorded as the sorted flattened key-paths so restore
+round-trips arbitrary nested dicts/lists of arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, extra: Dict[str, Any] | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    meta = {"keys": sorted(flat), "extra": extra or {}}
+    np.savez(path, __meta__=json.dumps(meta), **flat)
+
+
+def load_checkpoint(path: str, template) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``template``."""
+    with np.load(path if path.endswith(".npz") else path + ".npz",
+                 allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        flat = {k: data[k] for k in meta["keys"]}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_elems, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems
+        )
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]
+
+
+def save_trainer(path: str, trainer):
+    """Checkpoint a FederatedTrainer: server x, c, all N client states."""
+    store_tree = trainer.store.gather(np.arange(trainer.store.num_clients))
+    tree = {"x": trainer.x, "c": trainer.c, "store": store_tree}
+    save_checkpoint(path, tree, extra={"round": trainer.round_idx})
+
+
+def load_trainer(path: str, trainer):
+    store_tree = trainer.store.gather(np.arange(trainer.store.num_clients))
+    template = {"x": trainer.x, "c": trainer.c, "store": store_tree}
+    tree, extra = load_checkpoint(path, template)
+    trainer.x = jax.tree.map(np.asarray, tree["x"])
+    trainer.c = jax.tree.map(np.asarray, tree["c"])
+    trainer.store.scatter(np.arange(trainer.store.num_clients), tree["store"])
+    trainer.round_idx = int(extra.get("round", 0))
+    return trainer

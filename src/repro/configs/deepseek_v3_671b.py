@@ -1,0 +1,75 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8 [arXiv:2412.19437].
+
+MTP (multi-token prediction) is a training-objective add-on in the paper;
+we implement the main next-token path (MTP head omitted, noted in DESIGN.md).
+First 3 layers are dense (d_ff=18432); the remaining 58 are MoE with 256
+routed experts (top-8) of d_ff=2048 plus 1 shared expert.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    arch_type="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,  # MLA: per-head latent
+    head_dim=128,
+    d_ff=2048,  # routed expert width (assignment spec)
+    vocab_size=129280,
+    layer_pattern="F",
+    mlp_kind="silu_gated",
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        expert_d_ff=2048,
+        num_shared_experts=1,
+        shared_d_ff=2048,
+        first_dense_layers=3,
+        dense_d_ff=18432,
+    ),
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+    citation="arXiv:2412.19437",
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=64,
+        d_ff=128,
+        vocab_size=512,
+        mla=MLAConfig(
+            q_lora_rank=128,
+            kv_lora_rank=64,
+            qk_nope_head_dim=32,
+            qk_rope_head_dim=16,
+            v_head_dim=32,
+        ),
+        moe=MoEConfig(
+            num_experts=4,
+            top_k=2,
+            expert_d_ff=128,
+            num_shared_experts=1,
+            shared_d_ff=128,
+            first_dense_layers=1,
+            dense_d_ff=256,
+        ),
+        moe_impl="gshard",  # ragged_dot has no vmap rule for the client axis
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

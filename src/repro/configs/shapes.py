@@ -1,0 +1,46 @@
+"""The four assigned input shapes and the per-(arch, shape) round plans."""
+from __future__ import annotations
+
+from repro.configs.base import FedRoundSpec, InputShape
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", seq_len=4_096, global_batch=256, kind="train"),
+    "prefill_32k": InputShape("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill"),
+    "decode_32k": InputShape("decode_32k", seq_len=32_768, global_batch=128, kind="decode"),
+    "long_500k": InputShape("long_500k", seq_len=524_288, global_batch=1, kind="decode"),
+}
+
+# Architectures allowed to run long_500k (sub-quadratic / windowed decode path).
+# Skips are documented in DESIGN.md §4.
+LONG_CONTEXT_ARCHS = ("hymba-1.5b", "gemma3-1b", "mamba2-2.7b")
+
+
+def supports_shape(arch_name: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_name in LONG_CONTEXT_ARCHS
+    return True
+
+
+def default_round_spec(arch_name: str, algorithm: str = "scaffold") -> FedRoundSpec:
+    """Round plan for train_4k (global_batch=256 = S*K*b_local).
+
+    deepseek-v3-671b uses the client_sequential (FSDP) strategy with few
+    sampled clients per round so that {x, c, c_i[S]} fits HBM (DESIGN.md §7).
+    """
+    if arch_name == "deepseek-v3-671b":
+        return FedRoundSpec(
+            algorithm=algorithm,
+            num_clients=64,
+            num_sampled=2,
+            local_steps=4,
+            local_batch=32,
+            strategy="client_sequential",
+        )
+    return FedRoundSpec(
+        algorithm=algorithm,
+        num_clients=128,
+        num_sampled=16,
+        local_steps=4,
+        local_batch=4,
+        strategy="client_parallel",
+    )

@@ -1,0 +1,15 @@
+"""The paper's contribution: SCAFFOLD and its baselines as composable JAX.
+
+Entry points:
+  federated_round  — one pure/jittable communication round (Algorithm 1/2)
+  client_update    — one client's K corrected local steps
+  FederatedTrainer — host controller (sampling + stateful-client store)
+"""
+from repro.core.controller import (  # noqa: F401
+    ClientStateStore,
+    FederatedTrainer,
+    make_grad_fn,
+)
+from repro.core.local_solver import local_sgd  # noqa: F401
+from repro.core.rounds import client_update, federated_round  # noqa: F401
+from repro.core.sampling import ClientSampler  # noqa: F401

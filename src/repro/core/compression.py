@@ -1,0 +1,67 @@
+"""Communication compression for the round uplink (beyond-paper, but squarely
+in the paper's communication-efficiency theme and its own cited machinery —
+error feedback is Karimireddy et al. 2019, "Error feedback fixes SignSGD").
+
+Clients upload (Δy, Δc) once per round; uniform int8 quantization with a
+per-leaf scale cuts uplink bytes 4× (fp32) / 2× (bf16). The quantization
+error is kept client-side and added to the next round's delta (error
+feedback), so the long-run average update is unbiased.
+
+Pure functions over pytrees — composable with any of the four algorithms.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(tree) -> Tuple[Any, Any]:
+    """Per-leaf symmetric int8 quantization. Returns (q_tree, scales)."""
+
+    def q(x):
+        xf = x.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+        qx = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return qx, scale
+
+    leaves, treedef = jax.tree.flatten(tree)
+    out = [q(l) for l in leaves]
+    q_tree = jax.tree.unflatten(treedef, [o[0] for o in out])
+    scales = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return q_tree, scales
+
+
+def dequantize_int8(q_tree, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(dtype), q_tree, scales
+    )
+
+
+def compress_delta(delta, residual=None):
+    """Error-feedback compression of an uplink delta.
+
+    Returns (quantized, scales, new_residual). ``residual`` is the client's
+    carried quantization error from the previous round (None = zeros).
+    """
+    if residual is not None:
+        delta = jax.tree.map(
+            lambda d, r: d + r.astype(d.dtype), delta, residual
+        )
+    q, s = quantize_int8(delta)
+    recon = dequantize_int8(q, s)
+    new_residual = jax.tree.map(
+        lambda d, rec: d.astype(jnp.float32) - rec, delta, recon
+    )
+    return q, s, new_residual
+
+
+def uplink_bytes(tree) -> int:
+    """Bytes of an uncompressed uplink pytree."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def compressed_uplink_bytes(tree) -> int:
+    """int8 payload + one fp32 scale per leaf."""
+    return sum(l.size + 4 for l in jax.tree.leaves(tree))

@@ -1,0 +1,124 @@
+"""Host-side federated training controller.
+
+Owns:
+  * the server state (x, c) on device,
+  * the *full* N-client control-variate store on host (numpy, one slot per
+    client — the paper's "stateful clients"),
+  * the sampler and the per-round gather/scatter of sampled clients' c_i,
+  * the jitted round function.
+
+The device program only ever sees the S sampled clients (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rounds import federated_round
+from repro.core.sampling import ClientSampler
+from repro.core.tree import tree_index, tree_zeros_like
+
+
+def make_grad_fn(loss_fn: Callable) -> Callable:
+    """loss_fn(params, batch) -> (scalar, metrics)  =>  grad_fn -> (grads, metrics)."""
+
+    def grad_fn(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return grads, metrics
+
+    return grad_fn
+
+
+class ClientStateStore:
+    """Host store of all N clients' control variates (numpy-backed)."""
+
+    def __init__(self, template, num_clients: int):
+        self.num_clients = num_clients
+        self._leaves, self._treedef = jax.tree.flatten(
+            jax.tree.map(
+                lambda a: np.zeros((num_clients,) + a.shape, jax.numpy.asarray(a).dtype),
+                template,
+            )
+        )
+
+    def gather(self, ids: np.ndarray):
+        return jax.tree.unflatten(self._treedef, [l[ids] for l in self._leaves])
+
+    def scatter(self, ids: np.ndarray, c_i_new):
+        new_leaves = jax.tree.leaves(c_i_new)
+        for store_leaf, new_leaf in zip(self._leaves, new_leaves):
+            store_leaf[ids] = np.asarray(new_leaf)
+
+    def mean(self):
+        return jax.tree.unflatten(
+            self._treedef, [l.mean(axis=0) for l in self._leaves]
+        )
+
+
+class FederatedTrainer:
+    """Runs SCAFFOLD / FedAvg / FedProx / SGD rounds against a federated
+    dataset. ``dataset.round_batches(ids, K, b, rng)`` must return a pytree
+    with leaves (S, K, b, ...)."""
+
+    def __init__(self, loss_fn, init_params, spec, dataset, *, seed: int = 0,
+                 use_fused_update: bool = False, donate: bool = True):
+        self.spec = spec
+        self.dataset = dataset
+        key = jax.random.key(seed)
+        self.x = init_params(key)
+        self.c = tree_zeros_like(self.x)
+        self.momentum = (tree_zeros_like(self.x)
+                         if spec.server_momentum > 0.0 else None)
+        self.store = ClientStateStore(self.x, spec.num_clients)
+        self.sampler = ClientSampler(spec.num_clients, spec.num_sampled, seed)
+        self._rng = np.random.default_rng(seed + 1)
+        grad_fn = make_grad_fn(loss_fn)
+        round_fn = partial(federated_round, grad_fn, spec,
+                           use_fused_update=use_fused_update)
+        self.round_fn = jax.jit(round_fn, donate_argnums=(0, 1, 2) if donate else ())
+        self.round_idx = 0
+        self.history = []
+
+    def run_round(self) -> Dict[str, float]:
+        ids = self.sampler.sample()
+        c_i = self.store.gather(ids)
+        batches = self.dataset.round_batches(
+            ids, self.spec.local_steps, self.spec.local_batch, self._rng
+        )
+        if self.spec.server_momentum > 0.0:
+            self.x, self.c, c_i_new, self.momentum, metrics = self.round_fn(
+                self.x, self.c, c_i, batches, self.momentum
+            )
+        else:
+            self.x, self.c, c_i_new, metrics = self.round_fn(
+                self.x, self.c, c_i, batches
+            )
+        if self.spec.algorithm == "scaffold":
+            self.store.scatter(ids, c_i_new)
+        self.round_idx += 1
+        out = {k: float(v) for k, v in metrics.items()}
+        out["round"] = self.round_idx
+        self.history.append(out)
+        return out
+
+    def run(self, rounds: int, *, eval_fn: Optional[Callable] = None,
+            eval_every: int = 0, target_metric: Optional[float] = None,
+            metric_name: str = "accuracy", verbose: bool = False):
+        """Run rounds; if target_metric given, stop early once
+        eval_fn(x)[metric_name] >= target and return rounds used."""
+        for r in range(rounds):
+            m = self.run_round()
+            if eval_fn is not None and eval_every and (r + 1) % eval_every == 0:
+                em = eval_fn(self.x)
+                m.update(em)
+                if verbose:
+                    print(f"round {r+1}: {m}")
+                if target_metric is not None and em[metric_name] >= target_metric:
+                    return r + 1
+        return rounds

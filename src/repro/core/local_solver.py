@@ -1,0 +1,75 @@
+"""K local SGD steps on one client, with a pluggable drift correction.
+
+This is Algorithm 1 lines 7–11 (SCAFFOLD) / Algorithm 2 lines 7–11 (FedAvg):
+
+    y <- y - eta_l * (g_i(y) + correction(y))
+
+where correction = (c - c_i) for SCAFFOLD, 0 for FedAvg/SGD, and
+mu*(y - x) for FedProx. The K-step loop is a ``lax.scan`` so the lowered
+HLO is compact regardless of K; ``use_fused_update=True`` routes the
+update arithmetic through the Pallas ``scaffold_update`` kernel wrapper
+(TPU hot path; the jnp expression below is its oracle).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.tree import tree_index, tree_sub
+from repro.util import uscan
+
+
+def local_sgd(
+    grad_fn: Callable,
+    y0,
+    batches,  # pytree, leaves (K, b, ...)
+    eta_l: float,
+    *,
+    correction=None,  # pytree like params, or None
+    prox_mu: float = 0.0,
+    prox_center=None,
+    use_fused_update: bool = False,
+    shard_fn=None,  # optional with_sharding_constraint for the scan carry
+) -> Tuple[Any, jnp.ndarray]:
+    """Runs K local steps; returns (y_K, mean local loss).
+
+    ``shard_fn`` pins the carried client model to its param sharding —
+    without it GSPMD can fail to propagate the FSDP sharding into the
+    while-loop carry and replicate the full model per device (observed:
+    11.6 TB temp on deepseek-v3).
+    """
+
+    if use_fused_update:
+        from repro.kernels.scaffold_update import ops as fused_ops
+
+    def step(y, batch):
+        grads, metrics = grad_fn(y, batch)
+        if prox_mu:
+            grads = jax.tree.map(
+                lambda g, yy, xx: g + prox_mu * (yy - xx).astype(g.dtype),
+                grads, y, prox_center,
+            )
+        if correction is not None:
+            if use_fused_update:
+                y_new = jax.tree.map(
+                    lambda yy, gg, cc: fused_ops.scaffold_update(yy, gg, cc, eta_l),
+                    y, grads, correction,
+                )
+            else:
+                y_new = jax.tree.map(
+                    lambda yy, gg, cc: (yy - eta_l * (gg + cc)).astype(yy.dtype),
+                    y, grads, correction,
+                )
+        else:
+            y_new = jax.tree.map(
+                lambda yy, gg: (yy - eta_l * gg).astype(yy.dtype), y, grads
+            )
+        if shard_fn is not None:
+            y_new = shard_fn(y_new)
+        return y_new, metrics["loss"]
+
+    y, losses = uscan(step, y0, batches)
+    return y, jnp.mean(losses)

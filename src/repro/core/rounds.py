@@ -1,0 +1,219 @@
+"""One federated communication round, pure & jittable.
+
+``federated_round(grad_fn, spec, x, c, c_i, batches)`` implements
+Algorithm 1 (SCAFFOLD) and its ablations (FedAvg / FedProx / large-batch
+SGD) for the S *sampled* clients of the round. Client states for the
+unsampled N-S clients never enter the device program — the controller
+(repro.core.controller) scatters the returned `c_i_new` back into the host
+store, matching the paper's stateful-client semantics.
+
+Two execution strategies with identical algorithm semantics (tested):
+  client_parallel   vmap over the S clients (client axis shards over the
+                    `data` mesh axis; round aggregation becomes one
+                    all-reduce — the paper's "communication round").
+  client_sequential lax.scan over the S clients (FSDP-style for models
+                    whose state cannot fit one model-parallel group).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.local_solver import local_sgd
+from repro.util import uscan
+from repro.core.tree import (
+    tree_mean_leading,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+
+def _merge_step_batches(batches):
+    """(K, b, ...) leaves -> (K*b, ...) for Option I's pass at x."""
+    return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), batches)
+
+
+def client_update(grad_fn, spec, x, c, c_i, batches, uplink_res=None,
+                  use_fused_update: bool = False, shard_fn=None):
+    """Local work of one sampled client.
+
+    batches: pytree with leaves (K, b, ...). Returns (dy, dc, c_i_new, loss)
+    — dy = y_K - x (model delta), dc = c_i_new - c_i (control delta) —
+    plus the new uplink error-feedback residual when spec.compress_uplink.
+    """
+    algo = spec.algorithm
+    correction = None
+    prox_center = None
+    prox_mu = 0.0
+    if algo == "scaffold":
+        # c - c_i, applied every local step (eq. 3)
+        correction = tree_sub(c, c_i)
+    elif algo == "fedprox":
+        prox_center = x
+        prox_mu = spec.fedprox_mu
+
+    y, loss = local_sgd(
+        grad_fn, x, batches, spec.eta_l,
+        correction=correction, prox_mu=prox_mu, prox_center=prox_center,
+        use_fused_update=use_fused_update, shard_fn=shard_fn,
+    )
+    dy = tree_sub(y, x)
+
+    if algo == "scaffold":
+        if spec.scaffold_option == "II":
+            # c_i+ = c_i - c + (x - y)/(K*eta_l)   (eq. 4, option II)
+            inv = 1.0 / (spec.local_steps * spec.eta_l)
+            c_i_new = jax.tree.map(
+                lambda ci, cc, xx, yy: (ci - cc + inv * (xx - yy)).astype(ci.dtype),
+                c_i, c, x, y,
+            )
+        else:
+            # c_i+ = g_i(x): extra pass over the client's round data (eq. 4, I)
+            g_at_x, _ = grad_fn(x, _merge_step_batches(batches))
+            c_i_new = jax.tree.map(lambda g, ci: g.astype(ci.dtype), g_at_x, c_i)
+        dc = tree_sub(c_i_new, c_i)
+    else:
+        c_i_new = c_i
+        dc = tree_zeros_like(c_i)
+    if spec.compress_uplink:
+        from repro.core.compression import compress_delta, dequantize_int8
+
+        q, scales, new_res = compress_delta(dy, uplink_res)
+        # the server only ever sees the dequantized uplink
+        dy = jax.tree.map(
+            lambda rec, d: rec.astype(d.dtype),
+            dequantize_int8(q, scales), dy)
+        return dy, dc, c_i_new, loss, new_res
+    return dy, dc, c_i_new, loss
+
+
+def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
+                    weights=None, uplink_res=None,
+                    use_fused_update: bool = False, shard_fn=None):
+    """One communication round over the S sampled clients.
+
+    x, c: param-like pytrees (server model / server control variate).
+    c_i: pytree with leaves (S, ...) — sampled clients' control variates.
+    batches: pytree with leaves (S, K, b, ...).
+    momentum: server heavy-ball state (required iff spec.server_momentum>0);
+    when set the return becomes (x, c, c_i, momentum_new, metrics).
+    weights: optional (S,) client aggregation weights (paper §2 weighted
+    case; e.g. client dataset sizes) — normalised internally.
+    uplink_res: per-client error-feedback residuals (leaves (S, ...)) when
+    spec.compress_uplink; the new residuals are returned in metrics-position
+    order (x, c, c_i, [momentum], [uplink_res], metrics).
+    Returns (x_new, c_new, c_i_new, metrics).
+    """
+    algo = spec.algorithm
+
+    if algo == "sgd":
+        # large-batch SGD baseline: one server step on the whole round batch
+        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[3:]), batches)
+        grads, metrics = grad_fn(x, flat)
+        x_new = jax.tree.map(
+            lambda xx, gg: (xx - spec.eta_l * gg).astype(xx.dtype), x, grads
+        )
+        out_metrics = {
+            "loss": metrics["loss"],
+            "drift": jnp.zeros((), jnp.float32),
+            "update_norm": tree_norm(tree_sub(x_new, x)),
+        }
+        return x_new, c, c_i, out_metrics
+
+    fn = partial(client_update, grad_fn, spec,
+                 use_fused_update=use_fused_update,
+                 shard_fn=shard_fn if spec.strategy == "client_sequential"
+                 else None)
+
+    if weights is not None:
+        wnorm = weights.astype(jnp.float32)
+        wnorm = wnorm / jnp.maximum(wnorm.sum(), 1e-12)
+
+    def _wmean(tree_stacked):
+        if weights is None:
+            return tree_mean_leading(tree_stacked)
+        return jax.tree.map(
+            lambda a: jnp.tensordot(
+                wnorm, a.astype(jnp.float32), axes=(0, 0)).astype(a.dtype),
+            tree_stacked)
+
+    uplink_res_new = None
+    if spec.strategy == "client_parallel":
+        if spec.compress_uplink:
+            dy, dc, c_i_new, losses, uplink_res_new = jax.vmap(
+                fn, in_axes=(None, None, 0, 0, 0))(x, c, c_i, batches,
+                                                   uplink_res)
+        else:
+            dy, dc, c_i_new, losses = jax.vmap(
+                fn, in_axes=(None, None, 0, 0))(x, c, c_i, batches)
+        dy_mean = _wmean(dy)
+        dc_mean = _wmean(dc)
+        loss = jnp.mean(losses)
+        drift = jnp.mean(jax.vmap(tree_norm)(dy))
+    else:  # client_sequential
+        assert not spec.compress_uplink, (
+            "uplink compression is wired for client_parallel")
+
+        def scan_body(carry, inp):
+            dy_acc, dc_acc, loss_acc = carry
+            ci_k, batch_k, w_k = inp
+            dy_k, dc_k, ci_new_k, loss_k = fn(x, c, ci_k, batch_k)
+            dy_acc = jax.tree.map(
+                lambda a, d: a + w_k * d.astype(a.dtype), dy_acc, dy_k)
+            dc_acc = jax.tree.map(
+                lambda a, d: a + w_k * d.astype(a.dtype), dc_acc, dc_k)
+            if shard_fn is not None:
+                dy_acc = shard_fn(dy_acc)
+                dc_acc = shard_fn(dc_acc)
+                ci_new_k = shard_fn(ci_new_k)
+            return (dy_acc, dc_acc, loss_acc + loss_k), ci_new_k
+
+        s = spec.num_sampled
+        w_seq = (wnorm if weights is not None
+                 else jnp.full((s,), 1.0 / s, jnp.float32))
+        zeros = tree_zeros_like(x)
+        (dy_mean, dc_mean, loss_sum), c_i_new = uscan(
+            scan_body, (zeros, tree_zeros_like(c), jnp.zeros((), jnp.float32)),
+            (c_i, batches, w_seq),
+        )
+        loss = loss_sum / s
+        drift = tree_norm(dy_mean)
+
+    # server update (eq. 5 / alg 1 line 16-17); optional beyond-paper
+    # heavy-ball momentum on the aggregated update (FedAvgM-style)
+    momentum_new = None
+    if spec.server_momentum > 0.0:
+        assert momentum is not None, "pass momentum state for server_momentum"
+        momentum_new = jax.tree.map(
+            lambda m, d: (spec.server_momentum * m + d).astype(m.dtype),
+            momentum, dy_mean,
+        )
+        dy_mean = momentum_new
+    x_new = jax.tree.map(
+        lambda xx, d: (xx + spec.eta_g * d).astype(xx.dtype), x, dy_mean
+    )
+    if algo == "scaffold":
+        frac = spec.num_sampled / spec.num_clients
+        c_new = jax.tree.map(
+            lambda cc, d: (cc + frac * d).astype(cc.dtype), c, dc_mean
+        )
+    else:
+        c_new = c
+    metrics = {
+        "loss": loss,
+        "drift": drift,
+        "update_norm": tree_norm(dy_mean),
+    }
+    outs = [x_new, c_new, c_i_new]
+    if spec.server_momentum > 0.0:
+        outs.append(momentum_new)
+    if spec.compress_uplink:
+        outs.append(uplink_res_new)
+    outs.append(metrics)
+    return tuple(outs)

@@ -1,0 +1,15 @@
+"""Client sampling: uniform without replacement (paper §2)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ClientSampler:
+    def __init__(self, num_clients: int, num_sampled: int, seed: int = 0):
+        self.num_clients = num_clients
+        self.num_sampled = num_sampled
+        self._rng = np.random.default_rng(seed)
+
+    def sample(self) -> np.ndarray:
+        return self._rng.choice(self.num_clients, size=self.num_sampled,
+                                replace=False)

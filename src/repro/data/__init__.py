@@ -1,0 +1,8 @@
+from repro.data.emnist_like import EmnistLikeFederated  # noqa: F401
+from repro.data.quadratics import (  # noqa: F401
+    QuadraticDataset,
+    make_paper_fig3,
+    make_similarity_quadratics,
+    quadratic_loss,
+)
+from repro.data.synthetic_lm import SyntheticLMFederated  # noqa: F401

@@ -1,0 +1,113 @@
+"""Simulated quadratic clients (paper §7.2 / Theorem II lower-bound setup).
+
+Clients minimise f_i(x) = 1/2 x^T A_i x + b_i^T x. The constructors expose
+the paper's knobs directly:
+
+  * gradient dissimilarity G  (A1): ||∇f_i(x*)|| spread via ±G linear terms
+  * Hessian dissimilarity δ  (A2): A_i = A ± Δ with ||Δ|| = δ
+  * smoothness β = ||A_i||
+
+``make_paper_fig3`` reproduces the N=2 construction of Theorem VI
+(f1 = μx² + Gx, f2 = −Gx) embedded in d dimensions with δ=β=1.
+
+Batches carry the (A_i, b_i) of the owning client so the generic
+loss-driven round API applies; σ=0 (full-batch) exactly as in §7.2.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quadratic_loss(params, batch) -> Tuple[jnp.ndarray, Dict]:
+    """params: {"x": (d,)}; batch: {"A": (b,d,d), "b": (b,d)}."""
+    x = params["x"]
+    quad = 0.5 * jnp.einsum("bij,i,j->b", batch["A"], x, x)
+    lin = jnp.einsum("bi,i->b", batch["b"], x)
+    loss = jnp.mean(quad + lin)
+    return loss, {"loss": loss}
+
+
+def global_optimum(A_list, b_list):
+    A = np.mean(A_list, axis=0)
+    b = np.mean(b_list, axis=0)
+    return np.linalg.solve(A, -b)
+
+
+class QuadraticDataset:
+    """Federated dataset of N quadratic clients (σ=0: every local step sees
+    the client's full objective)."""
+
+    def __init__(self, A_list: np.ndarray, b_list: np.ndarray):
+        self.A = np.asarray(A_list, np.float32)  # (N, d, d)
+        self.b = np.asarray(b_list, np.float32)  # (N, d)
+        self.num_clients, self.dim = self.b.shape
+        self.x_star = global_optimum(self.A, self.b)
+        f = lambda x: float(
+            0.5 * x @ self.A.mean(0) @ x + self.b.mean(0) @ x
+        )
+        self.f_star = f(self.x_star)
+
+    def round_batches(self, ids: np.ndarray, K: int, b: int, rng) -> Dict:
+        s = len(ids)
+        return {
+            "A": jnp.asarray(np.broadcast_to(
+                self.A[ids][:, None, None], (s, K, b, self.dim, self.dim))),
+            "b": jnp.asarray(np.broadcast_to(
+                self.b[ids][:, None, None], (s, K, b, self.dim))),
+        }
+
+    def f(self, x) -> float:
+        x = np.asarray(x)
+        return float(0.5 * x @ self.A.mean(0) @ x + self.b.mean(0) @ x)
+
+    def suboptimality(self, params) -> float:
+        return self.f(np.asarray(params["x"])) - self.f_star
+
+
+def make_paper_fig3(G: float = 10.0, mu: float = 0.5, dim: int = 20,
+                    seed: int = 0) -> QuadraticDataset:
+    """N=2 construction of Theorem VI: f1 = μ|x|² + G·u·x, f2 = −G·u·x,
+    so f = μ|x|², δ = ||A1 − A2||/... = μ·2? — concretely: A1 = 2μI, A2 = 0
+    ⇒ β = 2μ (choose μ=0.5 for β=1), Hessian dissimilarity δ = β = 1,
+    gradient dissimilarity at x*: ||∇f_i(0)|| = G."""
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=dim)
+    u /= np.linalg.norm(u)
+    A1 = 2 * mu * np.eye(dim)
+    A2 = np.zeros((dim, dim))
+    b1 = G * u
+    b2 = -G * u
+    return QuadraticDataset(np.stack([A1, A2]), np.stack([b1, b2]))
+
+
+def make_similarity_quadratics(num_clients: int, dim: int, *, delta: float,
+                               G: float, beta: float = 1.0, mu: float = 0.1,
+                               seed: int = 0) -> QuadraticDataset:
+    """N clients with controllable Hessian dissimilarity δ and gradient
+    dissimilarity G around a shared strongly-convex base (Thm IV regime)."""
+    rng = np.random.default_rng(seed)
+    base_eigs = np.linspace(mu, beta, dim)
+    Q, _ = np.linalg.qr(rng.normal(size=(dim, dim)))
+    A = Q @ np.diag(base_eigs) @ Q.T
+    A_list, b_list = [], []
+    for i in range(num_clients):
+        M = rng.normal(size=(dim, dim))
+        M = (M + M.T) / 2
+        M = M / max(np.linalg.norm(M, 2), 1e-9) * delta
+        Ai = A + M
+        # keep weakly convex per (A2): shift if needed
+        w = np.linalg.eigvalsh(Ai)
+        if w.min() < 0:
+            Ai = Ai - w.min() * np.eye(dim)
+        bi = rng.normal(size=dim)
+        bi = bi / max(np.linalg.norm(bi), 1e-9) * G
+        A_list.append(Ai)
+        b_list.append(bi)
+    # recentre b so the mean linear term is small (optimum near origin)
+    b_arr = np.stack(b_list)
+    b_arr = b_arr - b_arr.mean(0, keepdims=True)
+    return QuadraticDataset(np.stack(A_list), b_arr)

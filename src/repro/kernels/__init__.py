@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the system's compute hot-spots (the paper itself
+has no kernel-level contribution — DESIGN.md §6):
+
+  scaffold_update   fused control-variate local step y - η(g + c - c_i)
+  swa_attention     sliding-window flash attention, O(S·W) band
+
+Each ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py
+(jit'd wrapper with CPU fallback), ref.py (pure-jnp oracle); validated in
+interpret mode over shape/dtype sweeps (tests/test_kernels.py).
+"""
+from repro.kernels.scaffold_update import scaffold_update  # noqa: F401
+from repro.kernels.swa_attention import swa_attention  # noqa: F401

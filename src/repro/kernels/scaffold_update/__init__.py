@@ -1,0 +1,1 @@
+from repro.kernels.scaffold_update.ops import scaffold_update  # noqa: F401

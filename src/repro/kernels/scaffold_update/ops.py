@@ -1,0 +1,43 @@
+"""jit'd wrapper: arbitrary-shape fused SCAFFOLD update.
+
+Flattens any parameter leaf to a padded (rows, 128) view, runs the Pallas
+kernel, and restores the shape. On non-TPU backends (this container) it
+runs the kernel in interpret mode only when explicitly asked; the default
+CPU path falls through to the oracle so unit-scale training stays fast.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scaffold_update import ref
+from repro.kernels.scaffold_update.kernel import (
+    BLOCK_ROWS,
+    LANES,
+    scaffold_update_2d,
+)
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("eta", "interpret"))
+def scaffold_update(y, g, corr, eta: float, *, interpret: bool = False):
+    """y' = y - eta*(g + corr), elementwise-fused. Any shape/dtype."""
+    if not (_is_tpu() or interpret):
+        return ref.scaffold_update_ref(y, g, corr, eta)
+    shape = y.shape
+    n = y.size
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    def flat(a):
+        a = a.reshape(-1)
+        if pad:
+            a = jnp.pad(a, (0, pad))
+        return a.reshape(-1, LANES)
+    out = scaffold_update_2d(flat(y), flat(g), flat(corr), eta,
+                             interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused SCAFFOLD update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scaffold_update_ref(y, g, corr, eta: float):
+    out = y.astype(jnp.float32) - eta * (
+        g.astype(jnp.float32) + corr.astype(jnp.float32)
+    )
+    return out.astype(y.dtype)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: sliding-window causal flash attention (prefill).
+
+Grid (B, Hq, num_q_blocks, num_kv_blocks_per_q): the innermost dimension
+walks ONLY the kv blocks inside the window band of the current q block
+(num_kv = window//BK + 1), so compute and DMA are O(S·W), not O(S²) —
+that is the structural win for gemma3-1b / hymba-1.5b long-context layers.
+
+Online softmax state (m, l, acc) lives in VMEM scratch and persists across
+the sequential innermost grid steps (TPU grid order is sequential); the
+output block is written on the last kv step. GQA is handled in the kv
+index_map (h // n_rep) — kv heads are never materially repeated.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(window: int, block_q: int, block_k: int, n_kv: int,
+                q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    qi = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute kv block index this step corresponds to (may be < 0 => masked)
+    kv_blk = qi * (block_q // block_k) - (n_kv - 1) + j
+    q = q_ref[0, 0].astype(jnp.float32)  # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (BK, Dv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = (q @ k.T) * scale  # (BQ, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kv_blk * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    rel = q_pos - k_pos
+    mask = (rel >= 0) & (rel < window) & (kv_blk >= 0)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def swa_attention_bhsd(q, k, v, window: int, *, block_q: int = 128,
+                       block_k: int = 128, interpret: bool = False):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D). Returns (B, Hq, S, D).
+
+    Requires S % block_q == 0, window % block_k == 0, block_q == block_k
+    multiples (we use block_q == block_k).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    n_rep = hq // hkv
+    block_q = min(block_q, s)
+    block_k = block_q  # keep band arithmetic simple
+    assert s % block_q == 0 and window % block_k == 0, (s, block_q, window)
+    n_q = s // block_q
+    n_kv = window // block_k + 1
+    grid = (b, hq, n_q, n_kv)
+
+    def q_map(bi, hi, qi, j):
+        return (bi, hi, qi, 0)
+
+    def kv_map(bi, hi, qi, j):
+        blk = qi * (block_q // block_k) - (n_kv - 1) + j
+        blk = jnp.maximum(blk, 0)  # clamped loads are fully masked in-kernel
+        return (bi, hi // n_rep, blk, 0)
+
+    kernel = functools.partial(_swa_kernel, window, block_q, block_k, n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), q_map),
+            pl.BlockSpec((1, 1, block_k, d), kv_map),
+            pl.BlockSpec((1, 1, block_k, v.shape[-1]), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, v.shape[-1]), q_map),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, v.shape[-1]), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m running row max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l running row sum
+            pltpu.VMEM((block_q, v.shape[-1]), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

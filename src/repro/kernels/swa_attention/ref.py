@@ -1,0 +1,28 @@
+"""Pure-jnp dense-mask oracle for sliding-window causal attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swa_attention_ref(q, k, v, window: int):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    n_rep = hq // hkv
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(d)
+    pos = jnp.arange(s)
+    rel = pos[:, None] - pos[None, :]
+    mask = (rel >= 0) & (rel < window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, multi-pod dry-run, training and serving
+drivers. NOTE: repro.launch.dryrun must be the process entrypoint (it sets
+XLA_FLAGS before any jax import)."""
+from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: F401

@@ -1,0 +1,352 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh and extract the roofline terms.
+
+MUST be executed as its own process (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS line above runs before any other import, including jax,
+because jax locks the host device count on first init.
+
+Per combo this produces a JSON artifact with:
+  memory_analysis   bytes per device (args/outputs/temps) — proves it fits
+  cost_analysis     HLO FLOPs / bytes accessed (per-device program)
+  collectives       per-op-kind byte totals parsed from the partitioned HLO
+  roofline          the three terms of EXPERIMENTS.md §Roofline
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    SHAPES,
+    default_round_spec,
+    get_config,
+    supports_shape,
+)
+from repro.core import federated_round, make_grad_fn  # noqa: E402
+from repro.dist import (  # noqa: E402
+    partition_client_states,
+    partition_params,
+    partition_serve_batch,
+    partition_train_batch,
+    replicated,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# hardware constants (TPU v5e target)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Sum output-operand bytes of every collective op in the partitioned
+    (per-device) HLO, by op kind."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start|-done)?\(", line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=")[0] + "=" + line.split("=")[1].split(kind)[0]
+        shapes = _SHAPE_RE.findall(lhs.split("=")[1])
+        nbytes = sum(_bytes_of(dt, dims) for dt, dims in shapes)
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg, spec):
+    grad_fn = make_grad_fn(partial(M.loss_fn, cfg))
+    return partial(federated_round, grad_fn, spec)
+
+
+def make_state_specs(cfg):
+    key = jax.random.key(0)
+    x_shapes = jax.eval_shape(partial(M.init_params, cfg), key)
+    return x_shapes
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool,
+              moe_impl: str = None, strategy: str = None,
+              remat: bool = None, out_dir: str = "experiments/dryrun",
+              tag: str = "", donate: bool = True, unroll: bool = False,
+              cache_shard: str = "seq", loss_chunk: int = 0,
+              moe_group: int = 0, moe_cap: float = 0.0,
+              expert_parallel: bool = False, num_sampled: int = 0,
+              local_steps: int = 0):
+    from repro.util import set_unroll
+
+    set_unroll(unroll)
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    overrides = {}
+    if moe_impl:
+        overrides["moe_impl"] = moe_impl
+    elif cfg.moe is not None:
+        overrides["moe_impl"] = "gshard"  # deterministic dispatch for GSPMD
+    if remat is not None:
+        overrides["remat"] = remat
+    if loss_chunk:
+        overrides["loss_chunk_vocab"] = loss_chunk
+    if (moe_group or moe_cap) and cfg.moe is not None:
+        moe_over = {}
+        if moe_group:
+            moe_over["gshard_group_size"] = moe_group
+        if moe_cap:
+            moe_over["capacity_factor"] = moe_cap
+        overrides["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    spec = default_round_spec(arch)
+    if multi_pod and spec.strategy == "client_parallel":
+        # clients shard over pod×data = 32 slices
+        spec = dataclasses.replace(spec, num_sampled=32, local_batch=2)
+    if strategy:
+        spec = dataclasses.replace(spec, strategy=strategy)
+    if num_sampled or local_steps:
+        # keep global batch: S*K*b fixed at shape.global_batch
+        s_ = num_sampled or spec.num_sampled
+        k_ = local_steps or spec.local_steps
+        kb = SHAPES[shape_name].global_batch // (s_ * k_)
+        spec = dataclasses.replace(spec, num_sampled=s_, local_steps=k_,
+                                   local_batch=kb)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.dist.activations import set_activation_mesh
+
+    set_activation_mesh(mesh)
+    t0 = time.time()
+    x_shapes = make_state_specs(cfg)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(x_shapes))
+
+    with mesh:
+        if shape.kind == "train":
+            x_sh = partition_params(x_shapes, mesh, spec.strategy,
+                                    expert_parallel=expert_parallel)
+            shard_fn = None
+            if spec.strategy == "client_sequential":
+                # pin scan carries to the FSDP sharding (local_solver docstring)
+                shard_fn = lambda tree: jax.lax.with_sharding_constraint(  # noqa: E731
+                    tree, x_sh)
+            grad_fn = make_grad_fn(partial(M.loss_fn, cfg))
+            step = partial(federated_round, grad_fn, spec, shard_fn=shard_fn)
+            c_sh = x_sh
+            ci_shapes = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct((spec.num_sampled,) + l.shape,
+                                               l.dtype), x_shapes)
+            ci_sh = partition_client_states(ci_shapes, mesh, spec.strategy,
+                                            expert_parallel=expert_parallel)
+            batch_shapes = M.input_specs(cfg, shape, spec)
+            b_sh = partition_train_batch(batch_shapes, mesh, spec.strategy)
+            jitted = jax.jit(
+                step,
+                in_shardings=(x_sh, c_sh, ci_sh, b_sh),
+                out_shardings=(x_sh, c_sh, ci_sh, None),
+                donate_argnums=(0, 1, 2) if donate else (),
+            )
+            lowered = jitted.lower(x_shapes, x_shapes, ci_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            pstrat = ("client_sequential" if arch == "deepseek-v3-671b"
+                      else "client_parallel")
+            x_sh = partition_params(x_shapes, mesh, pstrat)
+            batch_shapes = M.input_specs(cfg, shape)
+            b_sh = partition_serve_batch(batch_shapes, mesh, cache_mode=cache_shard)
+            jitted = jax.jit(
+                lambda p, b: M.prefill(cfg, p, b),
+                in_shardings=(x_sh, b_sh), out_shardings=None,
+            )
+            lowered = jitted.lower(x_shapes, batch_shapes)
+        else:  # decode
+            pstrat = ("client_sequential" if arch == "deepseek-v3-671b"
+                      else "client_parallel")
+            x_sh = partition_params(x_shapes, mesh, pstrat)
+            specs = M.input_specs(cfg, shape)
+            cache_shapes = specs["cache"]
+            cache_sh = partition_serve_batch(cache_shapes, mesh, cache_mode=cache_shard)
+            tok_sh = partition_serve_batch(
+                {"tokens": specs["tokens"], "pos": specs["pos"]}, mesh,
+                cache_mode=cache_shard)
+
+            def serve_step(p, cache, tokens, pos):
+                return M.decode_step(cfg, p, cache, tokens, pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(x_sh, cache_sh, tok_sh["tokens"], tok_sh["pos"]),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(x_shapes, cache_shapes, specs["tokens"],
+                                   specs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        try:
+            mem_d[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    cost = compiled.cost_analysis()
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "bytes accessed output", "optimal_seconds")}
+    hlo = compiled.as_text()
+    # structural cost model: multiplies while-loop bodies by their known
+    # trip counts (XLA's builtin counts scan bodies once — see
+    # launch/hlo_analysis.py). All values per-device.
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    struct = analyze_hlo(hlo)
+    coll = {k: int(v) for k, v in struct["collectives"].items()}
+    coll_total = int(struct["collective_bytes"])
+
+    chips = 512 if multi_pod else 256
+    flops_dev = struct["flops"]
+    bytes_dev = struct["bytes"]
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = bytes_dev / HBM_BW
+    collective_term = coll_total / ICI_BW
+
+    model_flops = None
+    if shape.kind == "train":
+        n_active = M.count_active_params(cfg)
+        tokens = shape.global_batch * shape.seq_len
+        # fwd+bwd = 6·N·D; one round does K local steps over the round data
+        # (each token seen once) plus the SCAFFOLD/option-II arithmetic.
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        n_active = M.count_active_params(cfg)
+        model_flops = 2.0 * n_active * shape.global_batch * shape.seq_len
+    else:
+        n_active = M.count_active_params(cfg)
+        model_flops = 2.0 * n_active * shape.global_batch
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "strategy": spec.strategy if shape.kind == "train" else "serve",
+        "tag": tag,
+        "params": n_params,
+        "active_params": n_active,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "cost_xla": cost_d,  # reference only (scan bodies counted once)
+        "cost_struct": {"flops": flops_dev, "bytes": bytes_dev,
+                        "bytes_by_kind": struct.get("bytes_by_kind", {})},
+        "collectives": coll,
+        "collective_bytes": coll_total,
+        "roofline": {
+            "compute_term_s": compute_term,
+            "memory_term_s": memory_term,
+            "collective_term_s": collective_term,
+            "dominant": max(
+                [("compute", compute_term), ("memory", memory_term),
+                 ("collective", collective_term)], key=lambda t: t[1])[0],
+            "model_flops_global": model_flops,
+            "hlo_flops_global": flops_dev * chips,
+            "useful_flops_frac": (model_flops / (flops_dev * chips))
+            if flops_dev else None,
+        },
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fname = f"{out_dir}/{arch}__{shape_name}__{result['mesh']}{suffix}.json"
+    with open(fname, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps({k: result[k] for k in
+                      ("arch", "shape", "mesh", "strategy", "lower_s",
+                       "compile_s", "memory", "collective_bytes",
+                       "roofline")}, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=[None, "ragged", "gshard"])
+    ap.add_argument("--strategy", default=None,
+                    choices=[None, "client_parallel", "client_sequential"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--cache-shard", default="seq", choices=["seq", "headdim"])
+    ap.add_argument("--moe-group", type=int, default=0)
+    ap.add_argument("--moe-cap", type=float, default=0.0)
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--num-sampled", type=int, default=0)
+    ap.add_argument("--local-steps", type=int, default=0)
+    ap.add_argument("--loss-chunk", type=int, default=0)
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll scans so cost_analysis counts true "
+                         "flops/bytes (roofline extraction runs)")
+    args = ap.parse_args()
+    if not supports_shape(args.arch, args.shape):
+        print(f"SKIP {args.arch} x {args.shape} (DESIGN.md §4)")
+        return
+    run_combo(args.arch, args.shape, multi_pod=args.multi_pod,
+              moe_impl=args.moe_impl, strategy=args.strategy,
+              remat=(False if args.no_remat else None),
+              out_dir=args.out_dir, tag=args.tag,
+              donate=not args.no_donate, unroll=args.unroll,
+              cache_shard=args.cache_shard, loss_chunk=args.loss_chunk,
+              moe_group=args.moe_group, moe_cap=args.moe_cap,
+              expert_parallel=args.expert_parallel,
+              num_sampled=args.num_sampled, local_steps=args.local_steps)
+
+
+if __name__ == "__main__":
+    main()

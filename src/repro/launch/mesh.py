@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices but only {len(devices)} "
+            "available — run under launch/dryrun.py which forces 512 host "
+            "platform devices"
+        )
+    dev_array = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many real devices exist (tests)."""
+    import numpy as np
+
+    devices = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devices, ("data", "model"))

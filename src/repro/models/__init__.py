@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    count_active_params,
+    count_params_analytic,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    prefill,
+)

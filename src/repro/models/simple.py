@@ -1,0 +1,62 @@
+"""The paper's experiment models: logistic regression and a 2-layer MLP
+(EMNIST §7.3), with the (params, batch) -> (loss, metrics) contract the
+federated core consumes."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def logreg_init(key, dim: int, num_classes: int):
+    return {
+        "w": jnp.zeros((dim, num_classes), jnp.float32),
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def logreg_loss(params, batch) -> Tuple[jnp.ndarray, Dict]:
+    logits = batch["x"] @ params["w"] + params["b"]
+    loss = _xent(logits, batch["y"])
+    return loss, {"loss": loss}
+
+
+def mlp_init(key, dim: int, num_classes: int, hidden: int = 256):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dim, hidden), jnp.float32)
+        / jnp.sqrt(jnp.float32(dim)),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, num_classes), jnp.float32)
+        / jnp.sqrt(jnp.float32(hidden)),
+        "b2": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def mlp_loss(params, batch) -> Tuple[jnp.ndarray, Dict]:
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    loss = _xent(logits, batch["y"])
+    return loss, {"loss": loss}
+
+
+def _xent(logits, labels):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(predict_logits_fn, params, batch) -> float:
+    logits = predict_logits_fn(params, batch)
+    return float(jnp.mean(jnp.argmax(logits, -1) == batch["y"]))
+
+
+def logreg_logits(params, batch):
+    return batch["x"] @ params["w"] + params["b"]
+
+
+def mlp_logits(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]

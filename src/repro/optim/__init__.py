@@ -1,0 +1,2 @@
+from repro.optim.schedules import constant, cosine_decay, linear_warmup  # noqa: F401
+from repro.optim.sgd import sgd_step  # noqa: F401

@@ -1,0 +1,25 @@
+"""Step-size schedules for the server/global step-size eta_g."""
+from __future__ import annotations
+
+import math
+
+
+def constant(lr: float):
+    return lambda step: lr
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        return lr * min(1.0, (step + 1) / max(warmup, 1))
+
+    return fn
+
+
+def cosine_decay(lr: float, total: int, warmup: int = 0, floor: float = 0.0):
+    def fn(step):
+        if step < warmup:
+            return lr * (step + 1) / max(warmup, 1)
+        t = (step - warmup) / max(total - warmup, 1)
+        return floor + (lr - floor) * 0.5 * (1 + math.cos(math.pi * min(t, 1.0)))
+
+    return fn

@@ -1,0 +1,22 @@
+"""Local-solver optimizers. The paper's local solver is plain SGD (which is
+what keeps SCAFFOLD's on-chip state to 3 param buffers — DESIGN.md §7);
+momentum provided as substrate for beyond-paper experiments."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_step(params, grads, lr, *, momentum: float = 0.0, velocity=None):
+    """Returns (new_params, new_velocity). velocity=None ⇒ plain SGD."""
+    if momentum and velocity is not None:
+        velocity = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(v.dtype), velocity, grads
+        )
+        update = velocity
+    else:
+        update = grads
+    new_params = jax.tree.map(
+        lambda p, u: (p - lr * u).astype(p.dtype), params, update
+    )
+    return new_params, velocity

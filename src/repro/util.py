@@ -1,0 +1,37 @@
+"""Shared utilities.
+
+``uscan`` wraps ``lax.scan`` with a process-global unroll switch: the
+dry-run sets ``set_unroll(True)`` when extracting roofline terms, because
+XLA's HloCostAnalysis counts while-loop bodies ONCE (verified empirically)
+— flops/bytes of scanned layers/local-steps would otherwise be
+undercounted by the trip count. Normal execution keeps rolled loops for
+compact HLO and fast compiles.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from jax import lax
+
+_UNROLL = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(value)
+
+
+def get_unroll() -> bool:
+    return _UNROLL
+
+
+def uscan(f: Callable, init: Any, xs: Any, length: Optional[int] = None):
+    return lax.scan(f, init, xs, length=length, unroll=True if _UNROLL else 1)
+
+
+def umap(f: Callable, xs: Any):
+    def body(_, x):
+        return None, f(x)
+
+    _, ys = uscan(body, None, xs)
+    return ys

@@ -1,0 +1,146 @@
+"""Integration tests: end-to-end repro of the paper's qualitative claims
+plus trainer/checkpoint round-trips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_trainer, save_trainer
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import EmnistLikeFederated, make_paper_fig3, quadratic_loss
+from repro.models.simple import logreg_init, logreg_logits, logreg_loss
+
+
+def _quad_trainer(algo, K, G, eta_l=0.1, seed=0):
+    ds = make_paper_fig3(G=G, seed=seed)
+    spec = FedRoundSpec(algorithm=algo, num_clients=2, num_sampled=2,
+                        local_steps=K, local_batch=1, eta_l=eta_l)
+    init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed)
+    return tr, ds
+
+
+def test_fig3_scaffold_beats_fedavg_and_sgd():
+    """Paper Fig. 3: at G=10, SCAFFOLD-K10 >> SGD >> FedAvg-K10."""
+    results = {}
+    for algo, K in [("sgd", 1), ("fedavg", 10), ("scaffold", 10)]:
+        tr, ds = _quad_trainer(algo, K, G=10.0)
+        for _ in range(50):
+            tr.run_round()
+        results[algo] = ds.suboptimality(tr.x)
+    assert results["scaffold"] < 1e-6
+    assert results["scaffold"] < results["sgd"] * 1e-3
+    assert results["sgd"] < results["fedavg"]
+
+
+def test_fedavg_degrades_with_local_steps_on_heterogeneous():
+    subs = {}
+    for K in (2, 10):
+        tr, ds = _quad_trainer("fedavg", K, G=10.0)
+        for _ in range(50):
+            tr.run_round()
+        subs[K] = ds.suboptimality(tr.x)
+    assert subs[10] > subs[2] * 5
+
+
+def test_scaffold_improves_with_local_steps():
+    subs = {}
+    for K in (2, 10):
+        tr, ds = _quad_trainer("scaffold", K, G=10.0)
+        for _ in range(50):
+            tr.run_round()
+        subs[K] = ds.suboptimality(tr.x)
+    assert subs[10] < subs[2]
+
+
+def test_emnist_like_scaffold_beats_fedavg_sorted_split():
+    """Table 3 qualitative: at 0% similarity (sorted split) SCAFFOLD
+    reaches the target accuracy in fewer rounds than FedAvg, which beats
+    SGD (the paper's headline ordering)."""
+    data = EmnistLikeFederated(num_clients=20, samples=8000,
+                               similarity_pct=0.0, seed=0)
+    tb = data.test_batch()
+
+    def rounds_to(algo, K, eta, target=0.5, max_r=80):
+        spec = FedRoundSpec(algorithm=algo, num_clients=20, num_sampled=4,
+                            local_steps=K, local_batch=16, eta_l=eta)
+        tr = FederatedTrainer(
+            logreg_loss, lambda k: logreg_init(k, 784, 62), spec, data,
+            seed=0)
+        acc_fn = jax.jit(lambda p: jnp.mean(
+            jnp.argmax(logreg_logits(p, tb), -1) == tb["y"]))
+        for r in range(max_r):
+            tr.run_round()
+            if float(acc_fn(tr.x)) >= target:
+                return r + 1
+        return max_r + 1
+
+    r_scaffold = rounds_to("scaffold", 10, 0.5)
+    r_fedavg = rounds_to("fedavg", 10, 0.5)
+    r_sgd = rounds_to("sgd", 1, 0.5)
+    assert r_scaffold <= r_fedavg, (r_scaffold, r_fedavg)
+    assert r_fedavg < r_sgd, (r_fedavg, r_sgd)
+    assert r_scaffold <= 40, r_scaffold
+
+
+def test_trainer_checkpoint_roundtrip(tmp_path):
+    tr, ds = _quad_trainer("scaffold", 5, G=10.0)
+    for _ in range(5):
+        tr.run_round()
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_trainer(path, tr)
+    x_before = np.asarray(tr.x["x"]).copy()
+    sub_before = ds.suboptimality(tr.x)
+    # fresh trainer, restore
+    tr2, _ = _quad_trainer("scaffold", 5, G=10.0, seed=0)
+    load_trainer(path, tr2)
+    np.testing.assert_allclose(np.asarray(tr2.x["x"]), x_before)
+    assert tr2.round_idx == 5
+    # continuing from restore keeps converging
+    for _ in range(10):
+        tr2.run_round()
+    assert ds.suboptimality(tr2.x) < sub_before
+
+
+def test_option_I_converges_like_option_II():
+    subs = {}
+    for opt in ("I", "II"):
+        ds = make_paper_fig3(G=10.0)
+        spec = FedRoundSpec(algorithm="scaffold", num_clients=2,
+                            num_sampled=2, local_steps=5, local_batch=1,
+                            eta_l=0.1, scaffold_option=opt)
+        init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+        tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0)
+        for _ in range(40):
+            tr.run_round()
+        subs[opt] = ds.suboptimality(tr.x)
+    assert subs["I"] < 1e-5 and subs["II"] < 1e-5, subs
+
+
+def test_client_sampling_sublinear_slowdown():
+    """Table 4 qualitative: sampling fewer clients slows SCAFFOLD only
+    sub-linearly (20% -> 5% sampling costs < 4x rounds at equal loss)."""
+    from repro.data import make_similarity_quadratics
+
+    ds = make_similarity_quadratics(20, 10, delta=0.3, G=5.0, mu=0.3, seed=1)
+    target = 1e-3
+
+    def rounds_to_target(s):
+        spec = FedRoundSpec(algorithm="scaffold", num_clients=20,
+                            num_sampled=s, local_steps=5, local_batch=1,
+                            eta_l=0.1)
+        init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+        tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0)
+        for r in range(400):
+            tr.run_round()
+            if ds.suboptimality(tr.x) < target:
+                return r + 1
+        return 400
+
+    r4 = rounds_to_target(4)   # 20%
+    r1 = rounds_to_target(1)   # 5%
+    assert r1 < 400, "did not converge with 5% sampling"
+    assert r1 < r4 * 12, (r1, r4)

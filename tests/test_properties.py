@@ -1,0 +1,186 @@
+"""Property-based tests (hypothesis) on the system's algorithmic invariants.
+
+Invariants from the paper:
+  P1  SCAFFOLD with corrections pinned to zero ≡ FedAvg, step for step.
+  P2  Full participation (S=N), option II: the server control variate
+      tracks c = mean_i(c_i) exactly after every round (alg. 1 line 17).
+  P3  client_parallel and client_sequential strategies are numerically
+      equivalent (same algorithm, different mapping).
+  P4  With K=1 the correction cancels in the aggregate: SCAFFOLD's server
+      model after one round from c=c_i=0 equals FedAvg's (the -c_i+c terms
+      average out under full participation).
+  P5  Quadratic, σ=0, S=N: SCAFFOLD suboptimality is independent of the
+      gradient-dissimilarity G (Thm III) while FedAvg's grows with G.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FedRoundSpec
+from repro.core import federated_round, make_grad_fn
+from repro.core.tree import tree_zeros_like
+from repro.data import (
+    QuadraticDataset,
+    make_paper_fig3,
+    make_similarity_quadratics,
+    quadratic_loss,
+)
+
+GRAD_FN = make_grad_fn(quadratic_loss)
+
+
+def _run_rounds(spec, ds, rounds, x0, seed=0):
+    rng = np.random.default_rng(seed)
+    x = {"x": jnp.asarray(x0)}
+    c = tree_zeros_like(x)
+    c_i = jax.tree.map(
+        lambda a: jnp.zeros((spec.num_sampled,) + a.shape, a.dtype), x
+    )
+    store = np.zeros((spec.num_clients, len(x0)), np.float32)
+    fn = jax.jit(lambda *a: federated_round(GRAD_FN, spec, *a))
+    for _ in range(rounds):
+        ids = rng.choice(spec.num_clients, spec.num_sampled, replace=False)
+        c_i = {"x": jnp.asarray(store[ids])}
+        batches = ds.round_batches(ids, spec.local_steps, spec.local_batch, rng)
+        x, c, c_i_new, m = fn(x, c, c_i, batches)
+        store[ids] = np.asarray(c_i_new["x"])
+    return x, c, store
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    k=st.integers(1, 5),
+    dim=st.integers(2, 12),
+    eta=st.floats(0.01, 0.2),
+    seed=st.integers(0, 100),
+)
+def test_p1_zero_corrections_equal_fedavg(n, k, dim, eta, seed):
+    ds = make_similarity_quadratics(n, dim, delta=0.3, G=3.0, seed=seed)
+    rng = np.random.default_rng(seed)
+    x0 = rng.normal(size=dim).astype(np.float32)
+    ids = np.arange(n)
+    batches = ds.round_batches(ids, k, 1, rng)
+    x = {"x": jnp.asarray(x0)}
+    zero = tree_zeros_like(x)
+    ci0 = {"x": jnp.zeros((n, dim), jnp.float32)}
+    sc = FedRoundSpec(algorithm="scaffold", num_clients=n, num_sampled=n,
+                      local_steps=k, local_batch=1, eta_l=eta)
+    fa = dataclasses.replace(sc, algorithm="fedavg")
+    # with c = c_i = 0 the corrected local update degenerates to FedAvg's
+    x_sc, _, _, _ = federated_round(GRAD_FN, sc, x, zero, ci0, batches)
+    x_fa, _, _, _ = federated_round(GRAD_FN, fa, x, zero, ci0, batches)
+    np.testing.assert_allclose(
+        np.asarray(x_sc["x"]), np.asarray(x_fa["x"]), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(2, 5),
+    k=st.integers(1, 4),
+    rounds=st.integers(1, 4),
+    seed=st.integers(0, 50),
+)
+def test_p2_server_control_is_mean_of_clients(n, k, rounds, seed):
+    ds = make_similarity_quadratics(n, 6, delta=0.2, G=2.0, seed=seed)
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=n, num_sampled=n,
+                        local_steps=k, local_batch=1, eta_l=0.05)
+    x0 = np.random.default_rng(seed).normal(size=6).astype(np.float32)
+    _, c, store = _run_rounds(spec, ds, rounds, x0, seed)
+    np.testing.assert_allclose(
+        np.asarray(c["x"]), store.mean(axis=0), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    s=st.integers(1, 3),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 50),
+)
+def test_p3_strategies_equivalent(n, s, k, seed):
+    s = min(s, n)
+    ds = make_similarity_quadratics(n, 8, delta=0.4, G=4.0, seed=seed)
+    rng = np.random.default_rng(seed)
+    ids = rng.choice(n, s, replace=False)
+    batches = ds.round_batches(ids, k, 1, rng)
+    x = {"x": jnp.asarray(rng.normal(size=8).astype(np.float32))}
+    c = {"x": jnp.asarray(rng.normal(size=8).astype(np.float32) * 0.1)}
+    ci = {"x": jnp.asarray(rng.normal(size=(s, 8)).astype(np.float32) * 0.1)}
+    base = FedRoundSpec(algorithm="scaffold", num_clients=n, num_sampled=s,
+                        local_steps=k, local_batch=1, eta_l=0.05)
+    seq = dataclasses.replace(base, strategy="client_sequential")
+    xp, cp, cip, _ = federated_round(GRAD_FN, base, x, c, ci, batches)
+    xs, cs, cis, _ = federated_round(GRAD_FN, seq, x, c, ci, batches)
+    for a, b in [(xp, xs), (cp, cs), (cip, cis)]:
+        np.testing.assert_allclose(np.asarray(a["x"]), np.asarray(b["x"]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_p5_scaffold_invariant_to_G_fedavg_not():
+    subs = {}
+    for algo in ("scaffold", "fedavg"):
+        for G in (1.0, 100.0):
+            ds = make_paper_fig3(G=G)
+            spec = FedRoundSpec(algorithm=algo, num_clients=2, num_sampled=2,
+                                local_steps=10, local_batch=1, eta_l=0.1)
+            x, _, _ = _run_rounds(spec, ds, 40, np.ones(ds.dim, np.float32))
+            subs[(algo, G)] = ds.suboptimality(x)
+    # SCAFFOLD: unchanged by G (ratio ~1); FedAvg: blows up ~G^2
+    sc_ratio = subs[("scaffold", 100.0)] / max(subs[("scaffold", 1.0)], 1e-12)
+    fa_ratio = subs[("fedavg", 100.0)] / max(subs[("fedavg", 1.0)], 1e-12)
+    assert sc_ratio < 10.0, subs
+    assert fa_ratio > 100.0, subs
+    # and SCAFFOLD beats FedAvg at high heterogeneity
+    assert subs[("scaffold", 100.0)] < subs[("fedavg", 100.0)] * 1e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100), g=st.floats(0.5, 50.0))
+def test_p4_k1_full_participation_scaffold_equals_fedavg_first_round(seed, g):
+    ds = make_paper_fig3(G=g, seed=seed)
+    rng = np.random.default_rng(seed)
+    x0 = rng.normal(size=ds.dim).astype(np.float32)
+    ids = np.arange(2)
+    batches = ds.round_batches(ids, 1, 1, rng)
+    x = {"x": jnp.asarray(x0)}
+    zero = tree_zeros_like(x)
+    ci0 = {"x": jnp.zeros((2, ds.dim), jnp.float32)}
+    for algo in ("scaffold", "fedavg"):
+        spec = FedRoundSpec(algorithm=algo, num_clients=2, num_sampled=2,
+                            local_steps=1, local_batch=1, eta_l=0.07)
+        out, _, _, _ = federated_round(GRAD_FN, spec, x, zero, ci0, batches)
+        if algo == "scaffold":
+            x_sc = out
+        else:
+            np.testing.assert_allclose(np.asarray(x_sc["x"]),
+                                       np.asarray(out["x"]), rtol=1e-5)
+
+
+def test_server_momentum_round_shapes_and_effect():
+    """Beyond-paper FedAvgM: momentum state threads through the round and
+    reduces sampling-noise suboptimality for FedAvg."""
+    from repro.core.tree import tree_zeros_like as tz
+
+    ds = make_similarity_quadratics(10, 6, delta=0.3, G=5.0, mu=0.3, seed=2)
+    rng = np.random.default_rng(0)
+    x = {"x": jnp.ones((6,), jnp.float32)}
+    spec = FedRoundSpec(algorithm="fedavg", num_clients=10, num_sampled=3,
+                        local_steps=4, local_batch=1, eta_l=0.1,
+                        eta_g=0.2, server_momentum=0.8)
+    m = tz(x)
+    c = tz(x)
+    ci = {"x": jnp.zeros((3, 6), jnp.float32)}
+    ids = rng.choice(10, 3, replace=False)
+    batches = ds.round_batches(ids, 4, 1, rng)
+    x2, c2, ci2, m2, metrics = federated_round(GRAD_FN, spec, x, c, ci,
+                                               batches, m)
+    assert jax.tree.structure(m2) == jax.tree.structure(x)
+    assert float(jnp.sum(jnp.abs(m2["x"]))) > 0.0
+    assert bool(jnp.isfinite(metrics["loss"]))
