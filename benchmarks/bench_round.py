@@ -1,7 +1,20 @@
 """Microbenchmark: wall time per federated round (reduced LM archs, CPU).
-Emits the us_per_call numbers for benchmarks.run's CSV."""
+
+Per arch, times the full FederatedTrainer round loop — host sampling +
+c_i gather + data loading + device round — in both execution modes:
+
+  sync       pipeline_depth=0 (seed semantics: host work serialises with
+             device compute)
+  pipelined  pipeline_depth=1 (host work for round r+1 overlaps the device
+             execution of round r — DESIGN.md §8)
+
+and reports the per-local-step kernel-launch counts of the fused-update
+paths (per-leaf vs packed, via jaxpr inspection in interpret mode).
+Emits the us_per_call numbers for benchmarks.run's CSV.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -10,44 +23,90 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.configs.base import FedRoundSpec
-from repro.core import federated_round, make_grad_fn
-from repro.core.tree import tree_zeros_like
+from repro.core import FederatedTrainer
+from repro.data import SyntheticLMFederated
+from repro.kernels.scaffold_update import ops as fused_ops
 from repro.models import init_params, loss_fn
 
 ARCHS = ("llama3.2-3b", "gemma3-1b", "mamba2-2.7b", "qwen2-moe-a2.7b",
          "hymba-1.5b")
+SEQ_LEN = 128
 
 
-def bench_arch(arch: str, *, algo: str = "scaffold", iters: int = 5):
-    cfg = get_reduced(arch)
-    spec = FedRoundSpec(algorithm=algo, num_clients=8, num_sampled=4,
+def _make_trainer(cfg, *, pipeline_depth: int, seed: int = 0):
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=8, num_sampled=4,
                         local_steps=4, local_batch=2, eta_l=0.01)
+    dataset = SyntheticLMFederated(spec.num_clients, cfg.vocab_size, SEQ_LEN,
+                                   seed=seed)
+    return FederatedTrainer(
+        lambda p, b: loss_fn(cfg, p, b),
+        lambda key: init_params(cfg, key),
+        spec, dataset, seed=seed, pipeline_depth=pipeline_depth,
+    )
+
+
+def bench_arch(arch: str, *, iters: int = 3):
+    """Returns (us_sync, us_pipelined) per round."""
+    cfg = get_reduced(arch)
+    out = {}
+    for mode, depth in (("sync", 0), ("pipelined", 1)):
+        tr = _make_trainer(cfg, pipeline_depth=depth)
+        tr.run_round()  # compile + first prefetch outside the timed region
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            tr.run_round()
+        jax.block_until_ready(tr.x)
+        out[mode] = (time.perf_counter() - t0) / iters * 1e6
+    return out["sync"], out["pipelined"]
+
+
+def kernel_launch_counts(arch: str):
+    """Per-local-step pallas_call counts of the fused update over the
+    arch's full (reduced) parameter tree: per-leaf path vs packed path."""
+    cfg = get_reduced(arch)
     params = init_params(cfg, jax.random.key(0))
-    grad_fn = make_grad_fn(lambda p, b: loss_fn(cfg, p, b))
-    c = tree_zeros_like(params)
-    c_i = jax.tree.map(lambda a: jnp.zeros((4,) + a.shape, a.dtype), params)
-    tokens = jax.random.randint(jax.random.key(1), (4, 4, 2, 128), 0,
-                                cfg.vocab_size)
-    batch = {"tokens": tokens, "labels": tokens}
-    fn = jax.jit(lambda *a: federated_round(grad_fn, spec, *a))
-    out = fn(params, c, c_i, batch)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(params, c, c_i, batch)
-    jax.block_until_ready(out)
-    dt = (time.perf_counter() - t0) / iters
-    return dt * 1e6  # us per round
+    ones = jax.tree.map(jnp.ones_like, params)
+    n_leaves = len(jax.tree.leaves(params))
+    n_leaf_path = fused_ops.count_pallas_calls(
+        lambda y, g, c: jax.tree.map(
+            lambda yy, gg, cc: fused_ops.scaffold_update(
+                yy, gg, cc, 0.01, interpret=True), y, g, c),
+        params, ones, ones)
+    n_packed_path = fused_ops.count_pallas_calls(
+        lambda y, g, c: fused_ops.scaffold_update_packed(
+            y, g, c, 0.01, interpret=True),
+        params, ones, ones)
+    return n_leaves, n_leaf_path, n_packed_path
 
 
-def main():
+def main(archs=ARCHS, *, iters: int = 3):
     rows = []
-    for arch in ARCHS:
-        us = bench_arch(arch)
-        rows.append({"arch": arch, "us_per_round": us})
-        print(f"round_{arch}: {us/1e3:.1f} ms/round (reduced cfg, CPU)")
+    for arch in archs:
+        us_sync, us_pipe = bench_arch(arch, iters=iters)
+        leaves, n_leaf, n_packed = kernel_launch_counts(arch)
+        rows.append({
+            "arch": arch,
+            "us_per_round": us_sync,
+            "us_per_round_pipelined": us_pipe,
+            "speedup": us_sync / max(us_pipe, 1e-9),
+            "param_leaves": leaves,
+            "launches_per_step_leaf": n_leaf,
+            "launches_per_step_packed": n_packed,
+        })
+        print(f"round_{arch}: sync {us_sync/1e3:8.1f} ms/round | "
+              f"pipelined {us_pipe/1e3:8.1f} ms/round "
+              f"({us_sync/max(us_pipe, 1e-9):.2f}x) | fused launches/step: "
+              f"{n_leaf} per-leaf -> {n_packed} packed "
+              f"({leaves} param leaves)")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(ARCHS),
+                    help="comma list of reduced arch names")
+    ap.add_argument("--iters", type=int, default=3,
+                    help="timed rounds per mode")
+    args = ap.parse_args()
+    main(tuple(a.strip() for a in args.archs.split(",") if a.strip()),
+         iters=args.iters)

@@ -77,8 +77,12 @@ def main() -> None:
 
         rows, us = _timed(bench_round.main)
         for r in rows:
+            # NOTE: since PR 1 this is full trainer wall time (host sampling
+            # + data loading + device round), not device-only round time
             emit(f"round_{r['arch']}", r["us_per_round"],
-                 "scaffold_round_reduced_cpu")
+                 f"scaffold_trainer_sync_cpu;"
+                 f"pipelined_us={r['us_per_round_pipelined']:.0f};"
+                 f"speedup={r['speedup']:.2f}x")
 
     if only is None or "roofline" in only:
         from benchmarks import roofline

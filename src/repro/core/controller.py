@@ -8,11 +8,21 @@ Owns:
   * the jitted round function.
 
 The device program only ever sees the S sampled clients (DESIGN.md §2).
+
+Execution is either synchronous (``pipeline_depth=0``, the seed
+behaviour) or pipelined (``pipeline_depth>=1``, DESIGN.md §8): the round
+function is dispatched asynchronously, the host prepares the next rounds'
+inputs (client sampling, c_i gather, ``dataset.round_batches``) while the
+device computes, and the ``ClientStateStore.scatter`` is deferred until
+the round's outputs are actually consumed. Prefetched c_i gathers that a
+later scatter would invalidate are re-gathered row-wise, so the pipelined
+trajectory is bit-for-bit identical to the synchronous one.
 """
 from __future__ import annotations
 
+from collections import deque
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,13 +71,31 @@ class ClientStateStore:
         )
 
 
+class _RoundInputs(NamedTuple):
+    """Host-prepared inputs of one round: sampled ids, their gathered c_i
+    (numpy, mutable — stale rows are re-gathered in place), data batches."""
+
+    ids: np.ndarray
+    c_i: Any
+    batches: Any
+
+
 class FederatedTrainer:
     """Runs SCAFFOLD / FedAvg / FedProx / SGD rounds against a federated
     dataset. ``dataset.round_batches(ids, K, b, rng)`` must return a pytree
-    with leaves (S, K, b, ...)."""
+    with leaves (S, K, b, ...).
+
+    ``pipeline_depth=0`` runs each round fully synchronously (sample,
+    gather, load, execute, scatter — the seed semantics, bit-for-bit).
+    ``pipeline_depth=d>=1`` keeps up to d rounds of host-side inputs
+    prefetched while the device executes, overlapping data loading and
+    control-variate gathers with compute; trajectories are identical.
+    """
 
     def __init__(self, loss_fn, init_params, spec, dataset, *, seed: int = 0,
-                 use_fused_update: bool = False, donate: bool = True):
+                 use_fused_update: bool = False, donate: bool = True,
+                 pipeline_depth: int = 0):
+        assert pipeline_depth >= 0, pipeline_depth
         self.spec = spec
         self.dataset = dataset
         key = jax.random.key(seed)
@@ -84,23 +112,70 @@ class FederatedTrainer:
         self.round_fn = jax.jit(round_fn, donate_argnums=(0, 1, 2) if donate else ())
         self.round_idx = 0
         self.history = []
+        self.pipeline_depth = int(pipeline_depth)
+        self._prefetch: deque = deque()
 
-    def run_round(self) -> Dict[str, float]:
+    # ------------------------------------------------------------------
+    # host-side round preparation (the work the pipeline overlaps)
+    # ------------------------------------------------------------------
+
+    def _prepare_inputs(self) -> _RoundInputs:
+        """Sample → gather → load, in the exact host-RNG order of the
+        synchronous loop (prefetching only moves the calls earlier in wall
+        time, never reorders them across rounds)."""
         ids = self.sampler.sample()
         c_i = self.store.gather(ids)
         batches = self.dataset.round_batches(
             ids, self.spec.local_steps, self.spec.local_batch, self._rng
         )
+        return _RoundInputs(ids, c_i, batches)
+
+    def _refresh_stale_rows(self, inputs: _RoundInputs,
+                            ids_written: np.ndarray) -> None:
+        """Re-gather the rows of a prefetched c_i that a scatter just
+        overwrote, restoring gather-at-launch-time semantics."""
+        stale = np.isin(inputs.ids, ids_written)
+        if not stale.any():
+            return
+        fresh = self.store.gather(inputs.ids[stale])
+        for leaf, fresh_leaf in zip(jax.tree.leaves(inputs.c_i),
+                                    jax.tree.leaves(fresh)):
+            leaf[stale] = fresh_leaf
+
+    def _dispatch(self, inp: _RoundInputs):
+        """Launch the jitted round (async dispatch — returns futures).
+        Unpacks the spec-dependent output arity; returns (c_i_new, metrics)
+        after storing x/c/momentum (still unmaterialised device arrays)."""
         if self.spec.server_momentum > 0.0:
             self.x, self.c, c_i_new, self.momentum, metrics = self.round_fn(
-                self.x, self.c, c_i, batches, self.momentum
+                self.x, self.c, inp.c_i, inp.batches, self.momentum
             )
         else:
             self.x, self.c, c_i_new, metrics = self.round_fn(
-                self.x, self.c, c_i, batches
+                self.x, self.c, inp.c_i, inp.batches
             )
+        return c_i_new, metrics
+
+    # ------------------------------------------------------------------
+    # round loop
+    # ------------------------------------------------------------------
+
+    def run_round(self) -> Dict[str, float]:
+        if self.pipeline_depth > 0:
+            inp = (self._prefetch.popleft() if self._prefetch
+                   else self._prepare_inputs())
+        else:
+            inp = self._prepare_inputs()
+        c_i_new, metrics = self._dispatch(inp)
+        # Overlap: while the device executes the dispatched round, prepare
+        # the next rounds' inputs on the host. Nothing below blocks until
+        # the scatter/metrics conversion actually needs the round outputs.
+        while len(self._prefetch) < self.pipeline_depth:
+            self._prefetch.append(self._prepare_inputs())
         if self.spec.algorithm == "scaffold":
-            self.store.scatter(ids, c_i_new)
+            self.store.scatter(inp.ids, c_i_new)  # first sync point
+            for pending in self._prefetch:
+                self._refresh_stale_rows(pending, inp.ids)
         self.round_idx += 1
         out = {k: float(v) for k, v in metrics.items()}
         out["round"] = self.round_idx

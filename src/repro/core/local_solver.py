@@ -7,8 +7,12 @@ This is Algorithm 1 lines 7–11 (SCAFFOLD) / Algorithm 2 lines 7–11 (FedAvg):
 where correction = (c - c_i) for SCAFFOLD, 0 for FedAvg/SGD, and
 mu*(y - x) for FedProx. The K-step loop is a ``lax.scan`` so the lowered
 HLO is compact regardless of K; ``use_fused_update=True`` routes the
-update arithmetic through the Pallas ``scaffold_update`` kernel wrapper
-(TPU hot path; the jnp expression below is its oracle).
+update arithmetic through the *packed* Pallas ``scaffold_update`` path —
+the whole parameter pytree flattened into one padded (rows, 128) buffer
+per dtype group, so each local step issues one ``pallas_call`` per group
+instead of one per leaf (TPU hot path, DESIGN.md §8; its oracle is the
+fp32-accumulating ``ref.scaffold_update_ref`` — for sub-fp32 dtypes that
+rounds differently than the native-dtype jnp expression below).
 """
 from __future__ import annotations
 
@@ -54,10 +58,8 @@ def local_sgd(
             )
         if correction is not None:
             if use_fused_update:
-                y_new = jax.tree.map(
-                    lambda yy, gg, cc: fused_ops.scaffold_update(yy, gg, cc, eta_l),
-                    y, grads, correction,
-                )
+                y_new = fused_ops.scaffold_update_packed(
+                    y, grads, correction, eta_l)
             else:
                 y_new = jax.tree.map(
                     lambda yy, gg, cc: (yy - eta_l * (gg + cc)).astype(yy.dtype),

@@ -7,6 +7,12 @@ unsampled N-S clients never enter the device program — the controller
 (repro.core.controller) scatters the returned `c_i_new` back into the host
 store, matching the paper's stateful-client semantics.
 
+``use_fused_update=True`` routes every local step's update arithmetic
+through the packed Pallas path (one kernel launch per dtype group per
+step — DESIGN.md §8). It matches its fp32-accumulating oracle
+(``ref.scaffold_update_ref``) exactly; for sub-fp32 param dtypes that
+accumulation differs by rounding from the native-dtype jnp expression.
+
 Two execution strategies with identical algorithm semantics (tested):
   client_parallel   vmap over the S clients (client axis shards over the
                     `data` mesh axis; round aggregation becomes one

@@ -1,0 +1,117 @@
+"""Distribution layer: partition specs + shardings for the production mesh.
+
+Axis convention (launch/mesh.py): ``("data", "model")``, optionally with a
+leading ``"pod"`` axis. Two parameter strategies mirror the round
+strategies (DESIGN.md §2):
+
+  client_parallel    params replicated over "data" (each data group holds
+                     a full model-parallel copy; the client axis of c_i /
+                     batches shards over "data"), tensor dims over "model".
+  client_sequential  FSDP: params sharded over "data" *and* "model"
+                     (deepseek-v3 — the full state never fits one
+                     model-parallel group, DESIGN.md §7).
+
+Every rule is divisibility-guarded: an axis is only assigned to a dim the
+axis size divides, so any leaf/mesh combination lowers. On a 1-device
+mesh everything degenerates to replication (tests run this path).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import param_partition_spec  # noqa: F401
+from repro.dist import activations  # noqa: F401
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(dict(mesh.shape).get(name, 1))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _spec_tree(shapes, mesh, strategy, *, lead_dims: int = 0,
+               lead_axis=None):
+    """Map every leaf to its PartitionSpec; ``lead_dims`` leading dims are
+    reserved (stacked clients etc.), dim 0 optionally sharded over
+    ``lead_axis`` when divisible."""
+
+    def mk(path, leaf):
+        ps = _path_str(path)
+        stack = lead_dims + (1 if ps.startswith("layers/") else 0)
+        spec = param_partition_spec(ps, leaf.shape, mesh, strategy,
+                                    lead_stack_dims=stack)
+        entries = list(spec)
+        if (lead_axis is not None and len(leaf.shape) > 0
+                and leaf.shape[0] % _axis_size(mesh, lead_axis) == 0):
+            entries[0] = lead_axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(mk, shapes)
+
+
+def _to_sharding(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def partition_params(shapes, mesh, strategy, *, expert_parallel: bool = False):
+    """NamedSharding tree for the server/client model state (x, c, y)."""
+    del expert_parallel  # experts ride the "model" axis in this layer
+    return _to_sharding(_spec_tree(shapes, mesh, strategy), mesh)
+
+
+def partition_client_states(shapes, mesh, strategy, *,
+                            expert_parallel: bool = False):
+    """c_i with leaves (S, ...): the sampled-client axis shards over
+    "data" under client_parallel (the round's vmap axis — rounds.py)."""
+    del expert_parallel
+    lead_axis = "data" if strategy == "client_parallel" else None
+    return _to_sharding(
+        _spec_tree(shapes, mesh, strategy, lead_dims=1, lead_axis=lead_axis),
+        mesh)
+
+
+def partition_train_batch(shapes, mesh, strategy):
+    """Round batches, leaves (S, K, b, ...): client axis over "data" under
+    client_parallel; under client_sequential S is scanned on-host order so
+    the local batch dim b shards over "data" instead."""
+
+    def mk(leaf):
+        nd = len(leaf.shape)
+        entries = [None] * nd
+        data = _axis_size(mesh, "data")
+        if strategy == "client_parallel":
+            if nd >= 1 and leaf.shape[0] % data == 0:
+                entries[0] = "data"
+        else:
+            if nd >= 3 and leaf.shape[2] % data == 0:
+                entries[2] = "data"
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(mk, shapes)
+
+
+def partition_serve_batch(shapes, mesh, *, cache_mode: str = "data"):
+    """Serve-path inputs/caches: batch dim over "data"; ``cache_mode=
+    "model"`` additionally shards the heads dim (dim 2 of (B,S,H,D) KV
+    caches) over "model" when divisible."""
+
+    def mk(leaf):
+        nd = len(leaf.shape)
+        entries = [None] * nd
+        if nd >= 1 and leaf.shape[0] % _axis_size(mesh, "data") == 0:
+            entries[0] = "data"
+        if (cache_mode == "model" and nd >= 4
+                and leaf.shape[2] % _axis_size(mesh, "model") == 0):
+            entries[2] = "model"
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(mk, shapes)
+
+
+def replicated(mesh):
+    """Fully-replicated sharding (scalars / metrics / small host state)."""
+    return NamedSharding(mesh, P())

@@ -1,0 +1,53 @@
+"""Activation sharding constraints.
+
+A process-global mesh (set by the launch layer) gates every constraint:
+with no mesh set — unit tests, CPU training, benchmarks — the functions
+are identity, so model code can call them unconditionally. Constraints
+are divisibility-guarded and drop axes absent from the mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_activation_mesh(mesh) -> None:
+    """Install (or clear, with None) the mesh used for activation
+    constraints. Called by launch/dryrun.py before lowering."""
+    global _MESH
+    _MESH = mesh
+
+
+def get_activation_mesh():
+    return _MESH
+
+
+def _sanitize(spec: Tuple, shape: Tuple[int, ...]) -> P:
+    """Drop axes the mesh lacks or whose size does not divide the dim."""
+    sizes = dict(_MESH.shape)
+    entries = []
+    for d, ax in enumerate(spec):
+        if ax is None or ax not in sizes or shape[d] % sizes[ax] != 0:
+            entries.append(None)
+        else:
+            entries.append(ax)
+    return P(*entries)
+
+
+def constrain_spec(x, spec: Tuple):
+    """with_sharding_constraint(x, P(*spec)) when a mesh is installed."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, _sanitize(spec, x.shape)))
+
+
+def constrain_batch_dim(x):
+    """Pin an activation's leading batch dim to the "data" axis."""
+    if _MESH is None:
+        return x
+    return constrain_spec(x, ("data",) + (None,) * (x.ndim - 1))

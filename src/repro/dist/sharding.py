@@ -1,0 +1,58 @@
+"""Per-leaf parameter PartitionSpec rules.
+
+``param_partition_spec`` is pure shape logic (works against a shape-only
+FakeMesh in tests): it never assigns a mesh axis to a dim the axis size
+does not divide, so the produced specs are valid on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(dict(mesh.shape).get(name, 1))
+
+
+def _pick_dim(shape: Tuple[int, ...], start: int, axis_size: int,
+              taken) -> int | None:
+    """Largest dim (ties → later dim, the usual tensor-parallel convention
+    of sharding the output/feature axis) divisible by ``axis_size``."""
+    best = None
+    for d in range(start, len(shape)):
+        if d in taken or shape[d] % axis_size != 0:
+            continue
+        if best is None or shape[d] >= shape[best]:
+            best = d
+    return best
+
+
+def param_partition_spec(path: str, shape: Tuple[int, ...], mesh,
+                         strategy: str, *, lead_stack_dims: int = 0) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    path:            flattened key path ("layers/attn/wq", ...)
+    lead_stack_dims: leading dims that are stacking axes (scanned layer
+                     stacks, sampled clients) — never tensor-sharded here.
+    strategy:        client_parallel (params replicated over "data") or
+                     client_sequential (FSDP: params also sharded over
+                     "data" — DESIGN.md §7).
+    """
+    del path  # rules are shape-driven; path only picks the stack dims
+    entries = [None] * len(shape)
+    taken = set(range(lead_stack_dims))
+    model = _axis_size(mesh, "model")
+    if model > 1:
+        d = _pick_dim(shape, lead_stack_dims, model, taken)
+        if d is not None:
+            entries[d] = "model"
+            taken.add(d)
+    if strategy == "client_sequential":
+        data = _axis_size(mesh, "data")
+        if data > 1:
+            d = _pick_dim(shape, lead_stack_dims, data, taken)
+            if d is not None:
+                entries[d] = "data"
+                taken.add(d)
+    return P(*entries)

@@ -1,1 +1,7 @@
-from repro.kernels.scaffold_update.ops import scaffold_update  # noqa: F401
+from repro.kernels.scaffold_update.ops import (  # noqa: F401
+    count_pallas_calls,
+    force_interpret,
+    scaffold_update,
+    scaffold_update_packed,
+    set_force_interpret,
+)

@@ -7,6 +7,10 @@ single pass; unfused, the three elementwise ops cost up to 8 HBM round
 trips when XLA fails to fuse across the lax.scan step boundary of the
 local-step loop. Tiled (BLOCK_ROWS, 128) VMEM blocks — the last dim matches
 the TPU lane width, BLOCK_ROWS a multiple of the 8-row sublane tile.
+
+Callers (ops.py) present either one padded leaf or a whole packed dtype
+group as the (rows, 128) operand, so this grid also amortises kernel
+launches across the parameter pytree (DESIGN.md §8).
 """
 from __future__ import annotations
 

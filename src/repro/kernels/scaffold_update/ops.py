@@ -1,12 +1,24 @@
-"""jit'd wrapper: arbitrary-shape fused SCAFFOLD update.
+"""jit'd wrappers: arbitrary-shape fused SCAFFOLD update.
 
-Flattens any parameter leaf to a padded (rows, 128) view, runs the Pallas
-kernel, and restores the shape. On non-TPU backends (this container) it
-runs the kernel in interpret mode only when explicitly asked; the default
-CPU path falls through to the oracle so unit-scale training stays fast.
+Two entry points over the same Pallas kernel (kernel.py):
+
+  scaffold_update         single leaf — flattens one array to a padded
+                          (rows, 128) view and runs one ``pallas_call``.
+  scaffold_update_packed  whole parameter pytree — concatenates every leaf
+                          of a dtype group into ONE padded (rows, 128)
+                          buffer so a K-step local loop issues one
+                          ``pallas_call`` per dtype group per step instead
+                          of one per leaf (DESIGN.md §8). Leaf offsets are
+                          static, so slicing the results back out is free.
+
+On non-TPU backends (this container) both fall through to the pure-jnp
+oracle unless interpret mode is requested — explicitly per call, or
+process-wide via :func:`force_interpret` (used by tests and benchmarks to
+exercise the kernel path on CPU).
 """
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
@@ -19,25 +31,125 @@ from repro.kernels.scaffold_update.kernel import (
     scaffold_update_2d,
 )
 
+_FORCE_INTERPRET = False
+
+
+def set_force_interpret(value: bool) -> None:
+    """Process-global switch: run the Pallas kernel in interpret mode even
+    off-TPU (instead of falling back to the jnp oracle).
+
+    The flag is read at *trace* time: it only affects functions traced
+    while it is set. An outer jit (e.g. a FederatedTrainer's round_fn)
+    compiled before flipping the switch keeps its baked-in mode — create
+    the trainer / trace the function inside the context."""
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = bool(value)
+
+
+@contextlib.contextmanager
+def force_interpret():
+    prev = _FORCE_INTERPRET
+    set_force_interpret(True)
+    try:
+        yield
+    finally:
+        set_force_interpret(prev)
+
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pad_to_tiles(flat):
+    """1-D array -> (rows, 128) view, zero-padded to a whole grid block."""
+    pad = (-flat.size) % (BLOCK_ROWS * LANES)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES)
+
+
 @partial(jax.jit, static_argnames=("eta", "interpret"))
-def scaffold_update(y, g, corr, eta: float, *, interpret: bool = False):
-    """y' = y - eta*(g + corr), elementwise-fused. Any shape/dtype."""
+def _scaffold_update_leaf(y, g, corr, eta: float, interpret: bool):
     if not (_is_tpu() or interpret):
         return ref.scaffold_update_ref(y, g, corr, eta)
-    shape = y.shape
-    n = y.size
-    tile = BLOCK_ROWS * LANES
-    pad = (-n) % tile
-    def flat(a):
-        a = a.reshape(-1)
-        if pad:
-            a = jnp.pad(a, (0, pad))
-        return a.reshape(-1, LANES)
-    out = scaffold_update_2d(flat(y), flat(g), flat(corr), eta,
-                             interpret=interpret)
+    shape, n = y.shape, y.size
+    out = scaffold_update_2d(
+        _pad_to_tiles(y.reshape(-1)),
+        _pad_to_tiles(g.reshape(-1)),
+        _pad_to_tiles(corr.reshape(-1)),
+        eta,
+        interpret=interpret,
+    )
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def scaffold_update(y, g, corr, eta: float, *, interpret: bool = False):
+    """y' = y - eta*(g + corr), elementwise-fused. Any shape/dtype."""
+    return _scaffold_update_leaf(y, g, corr, eta,
+                                 bool(interpret or _FORCE_INTERPRET))
+
+
+def scaffold_update_packed(y, g, corr, eta: float, *, interpret: bool = False):
+    """Pytree-level fused update: one ``pallas_call`` per dtype group.
+
+    Leaves are grouped by their exact ``(y, g, corr)`` dtype triple and
+    concatenated — never cast — into one zero-padded (rows, 128) buffer
+    per operand, so the kernel sees the same operand dtypes as the
+    per-leaf path and the results match it (and the CPU oracle fallback)
+    exactly. Each group runs the kernel once; leaves are sliced back out
+    at their static offsets.
+    """
+    interpret = bool(interpret or _FORCE_INTERPRET)
+    leaves_y, treedef = jax.tree.flatten(y)
+    # flatten_up_to raises a clear structure-mismatch error (like tree.map
+    # would) instead of letting zip() truncate silently below
+    leaves_g = treedef.flatten_up_to(g)
+    leaves_c = treedef.flatten_up_to(corr)
+    if not (_is_tpu() or interpret):
+        return jax.tree.unflatten(treedef, [
+            ref.scaffold_update_ref(yy, gg, cc, eta)
+            for yy, gg, cc in zip(leaves_y, leaves_g, leaves_c)
+        ])
+    groups = {}  # (y, g, corr) dtype triple -> leaf indices, insertion-ordered
+    for i, (ly, lg, lc) in enumerate(zip(leaves_y, leaves_g, leaves_c)):
+        key = (jnp.dtype(ly.dtype), jnp.dtype(lg.dtype), jnp.dtype(lc.dtype))
+        groups.setdefault(key, []).append(i)
+    out_leaves = [None] * len(leaves_y)
+    for idxs in groups.values():
+        buf = scaffold_update_2d(
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_y[i].reshape(-1) for i in idxs])),
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_g[i].reshape(-1) for i in idxs])),
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_c[i].reshape(-1) for i in idxs])),
+            eta,
+            interpret=interpret,
+        ).reshape(-1)
+        off = 0
+        for i in idxs:
+            n = leaves_y[i].size
+            out_leaves[i] = buf[off:off + n].reshape(leaves_y[i].shape)
+            off += n
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` equations in ``fn``'s jaxpr (recursing into
+    scan/cond/pjit sub-jaxprs, each counted once regardless of trip count).
+    Used by tests and bench_round to assert per-step kernel-launch counts."""
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for item in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(item, "jaxpr"):
+                        n += walk(item.jaxpr)
+                    elif hasattr(item, "eqns"):
+                        n += walk(item)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)

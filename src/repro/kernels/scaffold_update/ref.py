@@ -1,6 +1,8 @@
-"""Pure-jnp oracle for the fused SCAFFOLD update kernel."""
+"""Pure-jnp oracles for the fused SCAFFOLD update kernel (leaf and
+pytree-level; the packed path in ops.py must match these bit-for-bit)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -9,3 +11,10 @@ def scaffold_update_ref(y, g, corr, eta: float):
         g.astype(jnp.float32) + corr.astype(jnp.float32)
     )
     return out.astype(y.dtype)
+
+
+def scaffold_update_tree_ref(y, g, corr, eta: float):
+    """Per-leaf oracle for the packed pytree path."""
+    return jax.tree.map(
+        lambda yy, gg, cc: scaffold_update_ref(yy, gg, cc, eta), y, g, corr
+    )

@@ -132,9 +132,6 @@ def _parse_op(line: str) -> Optional[OpInfo]:
     name, rest = m.group(1), m.group(2)
     # strip metadata / backend_config tails for shape parsing of the def
     head = rest.split(", metadata=")[0]
-    # output shape(s) = text before the op kind token
-    km = re.search(
-        r"(?:^|\)\s|\]\S*\s|\}\s)\s*([a-z][\w\-]*)\(", rest)
     # find op kind: first token like `word(` after the shape spec
     km = re.search(r"\s([a-z][a-z0-9\-]*)\(", " " + head)
     if not km:
@@ -154,11 +151,31 @@ def _parse_op(line: str) -> Optional[OpInfo]:
                 if depth == 0:
                     end = i
                     break
-        operands = [
-            a.strip().lstrip("%")
-            for a in re.split(r",\s*(?![^\[]*\])", args_str[:end])
-            if a.strip()
-        ]
+        # split top-level commas only — operand strings embed commas inside
+        # both shape brackets f32[a,b] and layout braces {1,0}
+        parts: List[str] = []
+        buf: List[str] = []
+        nest = 0
+        for ch in args_str[:end]:
+            if ch in "([{":
+                nest += 1
+            elif ch in ")]}":
+                nest -= 1
+            if ch == "," and nest == 0:
+                parts.append("".join(buf))
+                buf = []
+            else:
+                buf.append(ch)
+        if buf:
+            parts.append("".join(buf))
+        # each operand is `[type[...]{layout}] %name` — keep the name
+        operands = []
+        for part in parts:
+            names = re.findall(r"%([\w.\-]+)", part)
+            if names:
+                operands.append(names[-1])
+            elif part.strip():
+                operands.append(part.strip())
     except Exception:
         operands = []
     trip = 1

@@ -1,0 +1,229 @@
+"""Tests for this PR's two hot-path changes (DESIGN.md §8):
+
+  * the pipelined controller (``pipeline_depth>0``) produces bit-for-bit
+    the same (x, c, store) trajectory as the synchronous loop, including
+    under client re-sampling overlap and RNG-dependent data loading;
+  * the packed fused update matches the per-leaf oracle over a
+    multi-leaf, mixed-shape, mixed-dtype pytree in interpret mode, and
+    issues exactly one ``pallas_call`` per local step per dtype group.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer, make_grad_fn
+from repro.core.local_solver import local_sgd
+from repro.data import (
+    EmnistLikeFederated,
+    make_paper_fig3,
+    make_similarity_quadratics,
+    quadratic_loss,
+)
+from repro.kernels.scaffold_update import ops as fused_ops
+from repro.kernels.scaffold_update.ref import (
+    scaffold_update_ref,
+    scaffold_update_tree_ref,
+)
+from repro.models.simple import logreg_init, logreg_loss
+
+
+# ---------------------------------------------------------------------------
+# pipelined controller parity
+# ---------------------------------------------------------------------------
+
+
+def _full_state(tr):
+    """(x, c, full N-client store) as numpy for bitwise comparison."""
+    return (
+        [np.asarray(l) for l in jax.tree.leaves(tr.x)],
+        [np.asarray(l) for l in jax.tree.leaves(tr.c)],
+        [np.asarray(l) for l in jax.tree.leaves(
+            tr.store.gather(np.arange(tr.store.num_clients)))],
+    )
+
+
+def _assert_state_equal(a, b):
+    for la, lb in zip(a, b):
+        for xa, xb in zip(la, lb):
+            np.testing.assert_array_equal(xa, xb)
+
+
+def _quad_trainers(depth, *, algo="scaffold", seed=0):
+    ds = make_similarity_quadratics(12, 8, delta=0.3, G=5.0, mu=0.3,
+                                    seed=seed)
+    spec = FedRoundSpec(algorithm=algo, num_clients=12, num_sampled=4,
+                        local_steps=3, local_batch=1, eta_l=0.1)
+    init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+    return FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed,
+                            pipeline_depth=depth)
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_pipelined_matches_sync_quadratics(depth):
+    """≥3 rounds, resampling overlap likely (S=4 of N=12): the pipelined
+    (x, c, store) trajectory must equal the synchronous one bitwise."""
+    tr_sync = _quad_trainers(0)
+    tr_pipe = _quad_trainers(depth)
+    for _ in range(5):
+        m_sync = tr_sync.run_round()
+        m_pipe = tr_pipe.run_round()
+        assert m_sync == m_pipe
+        _assert_state_equal(_full_state(tr_sync), _full_state(tr_pipe))
+
+
+def test_pipelined_matches_sync_rng_dataset():
+    """EMNIST-like loader consumes the host RNG inside round_batches —
+    prefetching must not reorder draws across rounds."""
+    def make(depth):
+        data = EmnistLikeFederated(num_clients=10, samples=400,
+                                   similarity_pct=0.0, seed=0,
+                                   test_samples=40)
+        spec = FedRoundSpec(algorithm="scaffold", num_clients=10,
+                            num_sampled=3, local_steps=2, local_batch=4,
+                            eta_l=0.1)
+        return FederatedTrainer(logreg_loss,
+                                lambda k: logreg_init(k, 784, 62),
+                                spec, data, seed=0, pipeline_depth=depth)
+
+    tr_sync, tr_pipe = make(0), make(1)
+    for _ in range(4):
+        tr_sync.run_round()
+        tr_pipe.run_round()
+    _assert_state_equal(_full_state(tr_sync), _full_state(tr_pipe))
+
+
+def test_pipelined_nonscaffold_runs():
+    """No store/scatter on the fedavg path; the pipeline must still work."""
+    tr = _quad_trainers(1, algo="fedavg")
+    for _ in range(3):
+        out = tr.run_round()
+    assert out["round"] == 3 and np.isfinite(out["loss"])
+
+
+def test_pipelined_stale_gather_refresh_is_exercised():
+    """Full participation: every prefetched gather is invalidated by the
+    previous round's scatter, so parity here proves the refresh works."""
+    def make(depth):
+        ds = make_paper_fig3(G=10.0)
+        spec = FedRoundSpec(algorithm="scaffold", num_clients=2,
+                            num_sampled=2, local_steps=5, local_batch=1,
+                            eta_l=0.1)
+        init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+        return FederatedTrainer(quadratic_loss, init, spec, ds, seed=0,
+                                pipeline_depth=depth), ds
+
+    (tr_sync, ds), (tr_pipe, _) = make(0), make(1)
+    for _ in range(10):
+        tr_sync.run_round()
+        tr_pipe.run_round()
+    _assert_state_equal(_full_state(tr_sync), _full_state(tr_pipe))
+    assert ds.suboptimality(tr_pipe.x) < 0.1  # still converging
+
+
+# ---------------------------------------------------------------------------
+# packed fused update
+# ---------------------------------------------------------------------------
+
+
+def _mixed_tree(seed=0):
+    """Multi-leaf, mixed-shape, mixed-dtype parameter-like pytree."""
+    ks = jax.random.split(jax.random.key(seed), 6)
+    return {
+        "w": jax.random.normal(ks[0], (17, 33), jnp.float32),
+        "b": jax.random.normal(ks[1], (7,), jnp.float32),
+        "emb": jax.random.normal(ks[2], (4, 96, 128), jnp.bfloat16),
+        "ln": {
+            "scale": jax.random.normal(ks[3], (33,), jnp.bfloat16),
+            "bias": jax.random.normal(ks[4], (), jnp.float32),
+        },
+    }
+
+
+@pytest.mark.parametrize("eta", [0.0, 0.05, 1.0])
+def test_packed_matches_per_leaf_oracle(eta):
+    y, g, corr = _mixed_tree(0), _mixed_tree(1), _mixed_tree(2)
+    out_packed = fused_ops.scaffold_update_packed(y, g, corr, eta,
+                                                  interpret=True)
+    out_ref = scaffold_update_tree_ref(y, g, corr, eta)
+    assert jax.tree.structure(out_packed) == jax.tree.structure(out_ref)
+    for pk, rf in zip(jax.tree.leaves(out_packed), jax.tree.leaves(out_ref)):
+        assert pk.shape == rf.shape and pk.dtype == rf.dtype
+        # XLA may contract y - eta*(g+corr) into an FMA in one compilation
+        # and not the other ⇒ allow 1-ulp slack per dtype.
+        tol = 1e-6 if pk.dtype == jnp.float32 else 2e-2
+        err = np.max(np.abs(np.asarray(pk, np.float32)
+                            - np.asarray(rf, np.float32)))
+        assert err < tol, (pk.dtype, err)
+
+
+def test_packed_mixed_y_g_dtypes_match_per_leaf():
+    """bf16 params with fp32 grads/corrections (the mixed-precision
+    contract): the packed path must not downcast g/corr before the fp32
+    kernel — results must equal the per-leaf oracle exactly."""
+    ks = jax.random.split(jax.random.key(7), 3)
+    y = {"w": jax.random.normal(ks[0], (33, 40), jnp.bfloat16)}
+    g = {"w": jax.random.normal(ks[1], (33, 40), jnp.float32)}
+    corr = {"w": jax.random.normal(ks[2], (33, 40), jnp.float32)}
+    out = fused_ops.scaffold_update_packed(y, g, corr, 0.1, interpret=True)
+    ref_out = scaffold_update_tree_ref(y, g, corr, 0.1)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"], np.float32), np.asarray(ref_out["w"], np.float32))
+
+
+def test_packed_one_pallas_call_per_dtype_group():
+    """The packed path must launch exactly one kernel per dtype group
+    (2 here: fp32 + bf16), vs one per leaf (5) on the per-leaf path."""
+    y, g, corr = _mixed_tree(0), _mixed_tree(1), _mixed_tree(2)
+    n_packed = fused_ops.count_pallas_calls(
+        lambda a, b, c: fused_ops.scaffold_update_packed(
+            a, b, c, 0.05, interpret=True), y, g, corr)
+    assert n_packed == 2, n_packed
+    n_leaf = fused_ops.count_pallas_calls(
+        lambda a, b, c: jax.tree.map(
+            lambda yy, gg, cc: fused_ops.scaffold_update(
+                yy, gg, cc, 0.05, interpret=True), a, b, c), y, g, corr)
+    assert n_leaf == len(jax.tree.leaves(y)), n_leaf
+
+
+def test_local_sgd_fused_one_launch_per_step():
+    """Through local_sgd's scan, the per-step (scan-body) kernel-launch
+    count is the dtype-group count — asserted via jaxpr inspection (the
+    scan body appears once in the jaxpr regardless of K)."""
+    y0 = {"w": jnp.ones((9, 5)), "b": jnp.zeros((5,))}
+    corr = {"w": jnp.full((9, 5), 0.5), "b": jnp.full((5,), 0.5)}
+    batches = {"t": jnp.ones((4, 2, 9), jnp.float32)}  # K=4, b=2
+
+    def grad_fn(params, batch):
+        g = jax.tree.map(jnp.ones_like, params)
+        return g, {"loss": jnp.zeros(())}
+
+    with fused_ops.force_interpret():
+        n = fused_ops.count_pallas_calls(
+            lambda p: local_sgd(grad_fn, p, batches, 0.1, correction=corr,
+                                use_fused_update=True), y0)
+    assert n == 1, n  # single fp32 dtype group ⇒ one launch per local step
+
+
+def test_fused_round_matches_unfused_through_trainer():
+    """End-to-end: a trainer on the packed interpret-mode kernel path
+    reproduces the plain-jnp trainer's trajectory (vmap over clients)."""
+    def make(fused):
+        ds = make_paper_fig3(G=10.0)
+        spec = FedRoundSpec(algorithm="scaffold", num_clients=2,
+                            num_sampled=2, local_steps=4, local_batch=1,
+                            eta_l=0.1)
+        init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+        return FederatedTrainer(quadratic_loss, init, spec, ds, seed=0,
+                                use_fused_update=fused)
+
+    tr_plain = make(False)
+    with fused_ops.force_interpret():
+        tr_fused = make(True)
+        for _ in range(3):
+            tr_plain.run_round()
+            tr_fused.run_round()
+    x_plain = np.asarray(tr_plain.x["x"])
+    x_fused = np.asarray(tr_fused.x["x"])
+    np.testing.assert_allclose(x_fused, x_plain, rtol=0, atol=1e-6)
