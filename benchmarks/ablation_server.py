@@ -6,6 +6,9 @@
    corrected).
 2. Server heavy-ball momentum (FedAvgM-style) under client sampling:
    smooths the sampling variance of the aggregated update.
+3. Server-optimizer sweep through the registry (sgd / momentum / adam —
+   FedAdam, Reddi et al. 2021): any optimizer composes with any
+   algorithm via ``FedRoundSpec.server_optimizer``.
 """
 from __future__ import annotations
 
@@ -47,6 +50,15 @@ def run(fast: bool = True):
             sub = _run(spec, ds)
             rows.append({"ablation": "server_momentum", "algo": algo,
                          "beta": beta, "suboptimality": sub})
+    for algo in ("fedavg", "scaffold"):
+        for opt, eta_g in (("sgd", 1.0), ("momentum", 0.2), ("adam", 0.03)):
+            spec = FedRoundSpec(algorithm=algo, eta_l=0.1, eta_g=eta_g,
+                                server_optimizer=opt,
+                                server_momentum=0.8 if opt == "momentum"
+                                else 0.0, **base)
+            sub = _run(spec, ds)
+            rows.append({"ablation": "server_optimizer", "algo": algo,
+                         "opt": opt, "suboptimality": sub})
     return rows
 
 
@@ -55,7 +67,9 @@ def main(fast: bool = True):
     print("ablation: server update variants (suboptimality after 80 rounds,"
           " 20% sampling, K=10, G=8)")
     for r in rows:
-        knob = f"eta_g={r['eta_g']}" if "eta_g" in r else f"beta={r['beta']}"
+        knob = (f"eta_g={r['eta_g']}" if "eta_g" in r
+                else f"beta={r['beta']}" if "beta" in r
+                else f"opt={r['opt']}")
         print(f"  {r['ablation']:16s} {r['algo']:9s} {knob:12s} "
               f"subopt={r['suboptimality']:.3e}")
     return rows

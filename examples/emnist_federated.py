@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FedRoundSpec
-from repro.core import FederatedTrainer
+from repro.core import FederatedTrainer, algorithm_names
 from repro.data import EmnistLikeFederated
 from repro.models.simple import logreg_init, logreg_logits, logreg_loss
 
@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--epochs", type=int, default=5, help="local epochs")
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--target", type=float, default=0.5)
+    ap.add_argument("--algos", default="sgd,fedavg,fedprox,scaffold",
+                    help=f"comma list from {algorithm_names()}")
+    ap.add_argument("--weighted", action="store_true",
+                    help="paper §2 weighted aggregation by shard sizes")
     args = ap.parse_args()
 
     data = EmnistLikeFederated(num_clients=args.clients, samples=20_000,
@@ -34,11 +38,16 @@ def main():
     print(f"N={args.clients} S={s} K={K} b={lb} "
           f"similarity={args.similarity}%\n")
 
-    for algo, eta in [("sgd", 1.0), ("fedavg", 1.0), ("fedprox", 1.0),
-                      ("scaffold", 0.5)]:
+    etas = {"scaffold": 0.5, "scaffold_m": 0.5}  # default eta_l=1.0
+    for algo in args.algos.split(","):
+        eta = etas.get(algo, 1.0)
+        # whole-batch sgd pools all samples into one step: per-client
+        # weighting does not apply (the spec rejects the combination)
+        weighted = args.weighted and algo != "sgd"
         spec = FedRoundSpec(algorithm=algo, num_clients=args.clients,
                             num_sampled=s, local_steps=1 if algo == "sgd"
-                            else K, local_batch=lb, eta_l=eta, fedprox_mu=1.0)
+                            else K, local_batch=lb, eta_l=eta, fedprox_mu=1.0,
+                            weighted_aggregation=weighted)
         tr = FederatedTrainer(logreg_loss,
                               lambda k: logreg_init(k, 784, 62), spec, data,
                               seed=0)

@@ -1,21 +1,24 @@
 """Quickstart: SCAFFOLD vs FedAvg on heterogeneous clients in ~40 lines.
 
 Reproduces the paper's core claim on the Theorem-II quadratics: FedAvg
-stalls under client drift, SCAFFOLD converges linearly.
+stalls under client drift, SCAFFOLD converges linearly. Any name in the
+algorithm registry (``repro.core.algorithm_names()``) drops into the
+same loop — e.g. ``scaffold_m`` for a server heavy-ball variant.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 
 from repro.configs.base import FedRoundSpec
-from repro.core import FederatedTrainer
+from repro.core import FederatedTrainer, algorithm_names
 from repro.data import make_paper_fig3, quadratic_loss
 
 
 def main():
     G = 10.0  # gradient dissimilarity between the two clients
     ds = make_paper_fig3(G=G)
-    print(f"2 heterogeneous quadratic clients, G={G}, 10 local steps/round\n")
+    print(f"2 heterogeneous quadratic clients, G={G}, 10 local steps/round")
+    print(f"registered algorithms: {', '.join(algorithm_names())}\n")
     for algo in ("fedavg", "scaffold"):
         spec = FedRoundSpec(
             algorithm=algo,

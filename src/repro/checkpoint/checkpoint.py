@@ -1,8 +1,17 @@
-"""Checkpointing: server state (x, c) + the full per-client control-variate
-store + sampler round counter, as flat .npz archives (offline-friendly).
+"""Checkpointing: the full typed trainer state — ``ServerState`` (x, c,
+server-optimizer slots), the per-client host stores (control variates +
+uplink error-feedback residuals), and the host RNGs (sampler + data) —
+as flat .npz archives (offline-friendly).
 
 Pytree structure is recorded as the sorted flattened key-paths so restore
-round-trips arbitrary nested dicts/lists of arrays.
+round-trips arbitrary nested dicts/lists of arrays. The host RNG states
+are JSON-serializable (numpy Generator bit_generator.state) and ride in
+the metadata, so a restored trainer re-prepares the exact same client
+samples and data batches: the resumed trajectory is bit-for-bit the
+unbroken run's (tests/test_checkpoint_roundtrip.py). For a pipelined
+trainer the recorded RNG states are rewound past un-executed prefetched
+rounds (``FederatedTrainer.host_rng_state``), so resuming is exact there
+too.
 """
 from __future__ import annotations
 
@@ -47,19 +56,48 @@ def load_checkpoint(path: str, template) -> Tuple[Any, Dict[str, Any]]:
     return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]
 
 
+def _trainer_tree(trainer) -> Dict[str, Any]:
+    """The trainer's array state as a plain dict (stable checkpoint keys,
+    independent of the registered-dataclass pytree paths)."""
+    all_ids = np.arange(trainer.store.num_clients)
+    tree = {
+        "x": trainer.server.x,
+        "c": trainer.server.c,
+        "opt_state": trainer.server.opt_state,
+        "store": trainer.store.gather(all_ids),
+    }
+    if trainer.residual_store is not None:
+        tree["residuals"] = trainer.residual_store.gather(all_ids)
+    return tree
+
+
 def save_trainer(path: str, trainer):
-    """Checkpoint a FederatedTrainer: server x, c, all N client states."""
-    store_tree = trainer.store.gather(np.arange(trainer.store.num_clients))
-    tree = {"x": trainer.x, "c": trainer.c, "store": store_tree}
-    save_checkpoint(path, tree, extra={"round": trainer.round_idx})
+    """Checkpoint a FederatedTrainer: ServerState, all N client states
+    (+ residuals when compressing), round counter, and host RNG states."""
+    extra = {
+        "round": trainer.round_idx,
+        "host_rng": trainer.host_rng_state(),
+    }
+    save_checkpoint(path, _trainer_tree(trainer), extra=extra)
 
 
 def load_trainer(path: str, trainer):
-    store_tree = trainer.store.gather(np.arange(trainer.store.num_clients))
-    template = {"x": trainer.x, "c": trainer.c, "store": store_tree}
-    tree, extra = load_checkpoint(path, template)
-    trainer.x = jax.tree.map(np.asarray, tree["x"])
-    trainer.c = jax.tree.map(np.asarray, tree["c"])
-    trainer.store.scatter(np.arange(trainer.store.num_clients), tree["store"])
+    """Restore ``save_trainer`` state into a compatibly-constructed
+    trainer (same spec/model/dataset). Clears any prefetched rounds."""
+    import dataclasses
+
+    tree, extra = load_checkpoint(path, _trainer_tree(trainer))
+    all_ids = np.arange(trainer.store.num_clients)
+    trainer.server = dataclasses.replace(
+        trainer.server,
+        x=jax.tree.map(np.asarray, tree["x"]),
+        c=jax.tree.map(np.asarray, tree["c"]),
+        opt_state=jax.tree.map(np.asarray, tree["opt_state"]),
+    )
+    trainer.store.scatter(all_ids, tree["store"])
+    if trainer.residual_store is not None:
+        trainer.residual_store.scatter(all_ids, tree["residuals"])
     trainer.round_idx = int(extra.get("round", 0))
+    if "host_rng" in extra:
+        trainer.set_host_rng_state(extra["host_rng"])
     return trainer

@@ -149,7 +149,7 @@ class FedRoundSpec:
     local steps on b_local sequences each.
     """
 
-    algorithm: str  # scaffold | fedavg | fedprox | sgd
+    algorithm: str  # any name in repro.core.api's algorithm registry
     num_clients: int  # N
     num_sampled: int  # S
     local_steps: int  # K
@@ -159,9 +159,20 @@ class FedRoundSpec:
     scaffold_option: str = "II"  # I | II
     fedprox_mu: float = 1.0
     strategy: str = "client_parallel"  # client_parallel | client_sequential
+    # server optimizer applied to the aggregated round delta (repro.core.api
+    # registry: sgd | momentum | adam). "" resolves to "momentum" when
+    # server_momentum > 0, else the algorithm's default.
+    server_optimizer: str = ""
     # beyond-paper: heavy-ball momentum on the aggregated server update
-    # (FedAvgM, Hsu et al. 2019) — composes with any algorithm
+    # (FedAvgM, Hsu et al. 2019) — composes with any algorithm; also the
+    # beta of the "momentum" server optimizer. Momentum-default algorithms
+    # (scaffold_m/fedavgm) write 0.9 here when left unset, so the running
+    # beta is always visible on the spec.
     server_momentum: float = 0.0
+    # FedAdam (Reddi et al. 2021) moments for the "adam" server optimizer
+    server_beta1: float = 0.9
+    server_beta2: float = 0.99
+    server_eps: float = 1e-8
     # beyond-paper: int8 uplink compression of (Δy, Δc) with client-side
     # error feedback (core/compression.py)
     compress_uplink: bool = False
@@ -170,7 +181,40 @@ class FedRoundSpec:
     weighted_aggregation: bool = False
 
     def __post_init__(self):
-        assert self.algorithm in ("scaffold", "fedavg", "fedprox", "sgd")
+        # lazy import: the registries live above configs in the layering
+        from repro.core.api import (
+            algorithm_names,
+            get_algorithm,
+            server_optimizer_names,
+        )
+
+        assert self.algorithm in algorithm_names(), (
+            self.algorithm, algorithm_names())
+        assert self.server_optimizer in ("",) + server_optimizer_names(), (
+            self.server_optimizer, server_optimizer_names())
+        algo = get_algorithm(self.algorithm)
+        if (self.server_optimizer == "" and self.server_momentum == 0.0
+                and algo.default_server_optimizer == "momentum"):
+            # momentum-default algorithms (scaffold_m/fedavgm) get a visible
+            # beta on the spec; an *explicit* server_optimizer="momentum"
+            # keeps server_momentum as given, so beta=0.0 stays expressible
+            object.__setattr__(self, "server_momentum", 0.9)
+        if algo.whole_batch:
+            # the sgd baseline takes one pooled server step: per-client
+            # weights, server-optimizer slots and uplink compression never
+            # enter its round — reject them loudly rather than no-op
+            assert not self.weighted_aggregation, (
+                f"weighted_aggregation has no effect for whole-batch "
+                f"{self.algorithm!r}")
+            assert self.server_optimizer in ("", "sgd"), (
+                f"server_optimizer={self.server_optimizer!r} has no effect "
+                f"for whole-batch {self.algorithm!r}")
+            assert self.server_momentum == 0.0, (
+                f"server_momentum has no effect for whole-batch "
+                f"{self.algorithm!r}")
+            assert not self.compress_uplink, (
+                f"compress_uplink has no effect for whole-batch "
+                f"{self.algorithm!r}")
         assert self.scaffold_option in ("I", "II")
         assert self.strategy in ("client_parallel", "client_sequential")
         assert self.num_sampled <= self.num_clients

@@ -1,15 +1,41 @@
 """The paper's contribution: SCAFFOLD and its baselines as composable JAX.
 
 Entry points:
-  federated_round  — one pure/jittable communication round (Algorithm 1/2)
+  run_round        — one pure/jittable communication round over typed
+                     states (ServerState/ClientRoundState -> RoundOutput)
+  federated_round  — back-compat tuple shim over run_round (Algorithm 1/2)
   client_update    — one client's K corrected local steps
-  FederatedTrainer — host controller (sampling + stateful-client store)
+  FederatedTrainer — host controller (sampling + stateful-client stores)
+
+Extensibility (DESIGN.md §9):
+  Algorithm / register_algorithm            — per-round algorithm strategy
+  ServerOptimizer / register_server_optimizer — server step on the
+                                              aggregated delta
 """
+from repro.core.api import (  # noqa: F401
+    Algorithm,
+    ClientRoundState,
+    RoundOutput,
+    ServerOptimizer,
+    ServerState,
+    algorithm_names,
+    get_algorithm,
+    get_server_optimizer,
+    init_server_state,
+    register_algorithm,
+    register_server_optimizer,
+    resolve_server_optimizer,
+    server_optimizer_names,
+)
 from repro.core.controller import (  # noqa: F401
     ClientStateStore,
     FederatedTrainer,
     make_grad_fn,
 )
 from repro.core.local_solver import local_sgd  # noqa: F401
-from repro.core.rounds import client_update, federated_round  # noqa: F401
+from repro.core.rounds import (  # noqa: F401
+    client_update,
+    federated_round,
+    run_round,
+)
 from repro.core.sampling import ClientSampler  # noqa: F401

@@ -1,0 +1,390 @@
+"""Typed round-state API and the algorithm / server-optimizer registries.
+
+The paper presents SCAFFOLD, FedAvg, FedProx and large-batch SGD as
+instances of one round template (Algorithm 1: local updates → aggregate
+deltas → server step). This module encodes that template as *types*
+instead of string `if/elif` chains and variable-arity tuples:
+
+  ServerState       everything the server owns between rounds: the model
+                    ``x``, the server control variate ``c``, and the
+                    server-optimizer slots (momentum / Adam moments).
+  ClientRoundState  the sampled clients' round-scoped state: their
+                    control variates ``c_i`` (leaves ``(S, ...)``),
+                    uplink error-feedback residuals, and aggregation
+                    weights.
+  RoundOutput       new ``ServerState`` + new ``ClientRoundState`` +
+                    the round metrics, fixed arity for every algorithm.
+
+All three are registered pytree dataclasses, so they jit/vmap/donate
+like any other pytree (DESIGN.md §9).
+
+Two registries make the template pluggable:
+
+  ``Algorithm``       the per-round algorithm strategy — what drift
+                      correction local steps apply and how the control
+                      variates update (``local_correction``,
+                      ``client_control_update``,
+                      ``server_control_update``). Registered:
+                      ``scaffold``, ``fedavg``, ``fedprox``, ``sgd``,
+                      plus the momentum variants ``scaffold_m`` /
+                      ``fedavgm`` (server heavy-ball by default — Cheng
+                      et al. 2023 show momentum helps non-IID FL; Hsu et
+                      al. 2019 is the FedAvgM baseline).
+  ``ServerOptimizer`` how the aggregated delta is applied to ``x`` —
+                      ``sgd`` (eq. 5), ``momentum`` (heavy-ball), and
+                      ``adam`` (FedAdam-style, Reddi et al. 2021).
+                      Composes with any algorithm.
+
+Registering a new algorithm or server optimizer is one subclass + one
+``register_*`` call; nothing in the engine, controller, checkpointing or
+launch layers needs to change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import tree_sub, tree_zeros_like
+
+# ---------------------------------------------------------------------------
+# typed round state (registered pytree dataclasses)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["x", "c", "opt_state"], meta_fields=[])
+@dataclasses.dataclass
+class ServerState:
+    """Everything the server carries between rounds.
+
+    x:         model parameters (param pytree).
+    c:         server control variate (param-like pytree; zeros and
+               unused for non-SCAFFOLD algorithms, kept for fixed arity).
+    opt_state: server-optimizer slots (``{}`` for plain SGD, ``{"m": …}``
+               for heavy-ball, ``{"m": …, "v": …, "t": …}`` for Adam).
+    """
+
+    x: Any
+    c: Any
+    opt_state: Any
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["c_i", "uplink_residual", "weights"], meta_fields=[])
+@dataclasses.dataclass
+class ClientRoundState:
+    """Round-scoped state of the S sampled clients.
+
+    c_i:             control variates, leaves ``(S, ...)``.
+    uplink_residual: error-feedback residuals carried across rounds when
+                     ``spec.compress_uplink`` (leaves ``(S, ...)``,
+                     fp32), else None.
+    weights:         optional ``(S,)`` aggregation weights (paper §2
+                     weighted case, e.g. client dataset sizes);
+                     normalised inside the round.
+    """
+
+    c_i: Any
+    uplink_residual: Any = None
+    weights: Optional[jnp.ndarray] = None
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["server", "clients", "metrics"], meta_fields=[])
+@dataclasses.dataclass
+class RoundOutput:
+    """Fixed-arity result of one communication round."""
+
+    server: ServerState
+    clients: ClientRoundState
+    metrics: Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# algorithm strategies
+# ---------------------------------------------------------------------------
+
+
+class Algorithm:
+    """One federated algorithm = one strategy over the round template.
+
+    Subclasses override the three hooks; the engine (``core/rounds.py``)
+    and controller never branch on algorithm names.
+    """
+
+    name: str = ""
+    # scaffold-family: clients carry c_i across rounds and the controller
+    # scatters c_i_new back into the host store
+    stateful_clients: bool = False
+    # sgd baseline: one server step on the whole round batch, no local work
+    whole_batch: bool = False
+    # server optimizer used when the spec does not name one
+    default_server_optimizer: str = "sgd"
+
+    def local_correction(self, spec, x, c, c_i):
+        """Constant per-step correction added to local gradients
+        (SCAFFOLD's ``c - c_i``), or None."""
+        return None
+
+    def prox_mu(self, spec) -> float:
+        """FedProx proximal coefficient (0 disables the prox term)."""
+        return 0.0
+
+    def client_control_update(self, spec, x, y, c, c_i,
+                              grad_at_x: Callable[[], Any]
+                              ) -> Tuple[Any, Any]:
+        """New client control variate after the K local steps.
+
+        ``grad_at_x`` lazily computes g_i(x) over the client's round data
+        (only traced if called — SCAFFOLD option I). Returns
+        ``(c_i_new, dc)`` with ``dc = c_i_new - c_i``.
+        """
+        return c_i, tree_zeros_like(c_i)
+
+    def server_control_update(self, spec, c, dc_mean):
+        """New server control variate from the aggregated dc."""
+        return c
+
+
+class FedAvg(Algorithm):
+    name = "fedavg"
+
+
+class FedProx(Algorithm):
+    name = "fedprox"
+
+    def prox_mu(self, spec) -> float:
+        return spec.fedprox_mu
+
+
+class Scaffold(Algorithm):
+    name = "scaffold"
+    stateful_clients = True
+
+    def local_correction(self, spec, x, c, c_i):
+        # c - c_i, applied every local step (eq. 3)
+        return tree_sub(c, c_i)
+
+    def client_control_update(self, spec, x, y, c, c_i, grad_at_x):
+        if spec.scaffold_option == "II":
+            # c_i+ = c_i - c + (x - y)/(K*eta_l)   (eq. 4, option II)
+            inv = 1.0 / (spec.local_steps * spec.eta_l)
+            c_i_new = jax.tree.map(
+                lambda ci, cc, xx, yy: (ci - cc + inv * (xx - yy)).astype(ci.dtype),
+                c_i, c, x, y,
+            )
+        else:
+            # c_i+ = g_i(x): extra pass over the client's round data (eq. 4, I)
+            c_i_new = jax.tree.map(
+                lambda g, ci: g.astype(ci.dtype), grad_at_x(), c_i)
+        return c_i_new, tree_sub(c_i_new, c_i)
+
+    def server_control_update(self, spec, c, dc_mean):
+        # c+ = c + (S/N) * mean dc   (alg. 1 line 17)
+        frac = spec.num_sampled / spec.num_clients
+        return jax.tree.map(
+            lambda cc, d: (cc + frac * d).astype(cc.dtype), c, dc_mean
+        )
+
+
+class LargeBatchSGD(Algorithm):
+    name = "sgd"
+    whole_batch = True
+
+
+class ScaffoldM(Scaffold):
+    """SCAFFOLD with a server heavy-ball step by default (momentum on the
+    aggregated drift-corrected delta — the server-side variant of Cheng
+    et al. 2023's momentum corrections)."""
+
+    name = "scaffold_m"
+    default_server_optimizer = "momentum"
+
+
+class FedAvgM(FedAvg):
+    """FedAvgM (Hsu et al. 2019): FedAvg + server heavy-ball."""
+
+    name = "fedavgm"
+    default_server_optimizer = "momentum"
+
+
+_ALGORITHMS: Dict[str, Algorithm] = {}
+
+
+def register_algorithm(algo: Algorithm) -> Algorithm:
+    """Register an ``Algorithm`` instance under its ``name``."""
+    assert algo.name, "Algorithm subclasses must set a name"
+    _ALGORITHMS[algo.name] = algo
+    return algo
+
+
+def get_algorithm(name: str) -> Algorithm:
+    try:
+        return _ALGORITHMS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: {algorithm_names()}"
+        ) from None
+
+
+def algorithm_names() -> Tuple[str, ...]:
+    return tuple(sorted(_ALGORITHMS))
+
+
+for _a in (Scaffold(), FedAvg(), FedProx(), LargeBatchSGD(),
+           ScaffoldM(), FedAvgM()):
+    register_algorithm(_a)
+
+
+# ---------------------------------------------------------------------------
+# server optimizers
+# ---------------------------------------------------------------------------
+
+
+class ServerOptimizer:
+    """Applies the aggregated round delta ``dy_mean`` to the server model.
+
+    ``apply`` returns ``(x_new, opt_state_new, applied_update)`` where
+    ``applied_update`` is the effective step direction (reported as the
+    round's ``update_norm`` metric).
+    """
+
+    name: str = ""
+
+    def init(self, spec, x) -> Any:
+        return {}
+
+    def apply(self, spec, opt_state, x, dy_mean):
+        raise NotImplementedError
+
+
+class ServerSGD(ServerOptimizer):
+    """x+ = x + eta_g * dy_mean  (eq. 5 / alg. 1 line 16)."""
+
+    name = "sgd"
+
+    def apply(self, spec, opt_state, x, dy_mean):
+        x_new = jax.tree.map(
+            lambda xx, d: (xx + spec.eta_g * d).astype(xx.dtype), x, dy_mean
+        )
+        return x_new, opt_state, dy_mean
+
+
+class ServerMomentum(ServerOptimizer):
+    """Heavy-ball on the aggregated delta (FedAvgM-style):
+    m+ = beta*m + dy;  x+ = x + eta_g * m+.
+
+    beta is exactly ``spec.server_momentum`` — momentum-default algorithms
+    get 0.9 written onto the spec at construction
+    (``FedRoundSpec.__post_init__``), so the running beta is always
+    visible and an explicit beta=0.0 is honoured."""
+
+    name = "momentum"
+
+    def beta(self, spec) -> float:
+        return spec.server_momentum
+
+    def init(self, spec, x):
+        return {"m": tree_zeros_like(x)}
+
+    def apply(self, spec, opt_state, x, dy_mean):
+        beta = self.beta(spec)
+        m_new = jax.tree.map(
+            lambda m, d: (beta * m + d).astype(m.dtype),
+            opt_state["m"], dy_mean,
+        )
+        x_new = jax.tree.map(
+            lambda xx, d: (xx + spec.eta_g * d).astype(xx.dtype), x, m_new
+        )
+        return x_new, {"m": m_new}, m_new
+
+
+class ServerAdam(ServerOptimizer):
+    """FedAdam (Reddi et al. 2021, "Adaptive Federated Optimization"):
+    Adam on the pseudo-gradient ``dy_mean``, fp32 moment slots."""
+
+    name = "adam"
+
+    def init(self, spec, x):
+        f32 = lambda a: jnp.zeros(a.shape, jnp.float32)  # noqa: E731
+        return {
+            "m": jax.tree.map(f32, x),
+            "v": jax.tree.map(f32, x),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, spec, opt_state, x, dy_mean):
+        b1, b2, eps = spec.server_beta1, spec.server_beta2, spec.server_eps
+        t = opt_state["t"] + 1
+        m_new = jax.tree.map(
+            lambda m, d: b1 * m + (1.0 - b1) * d.astype(jnp.float32),
+            opt_state["m"], dy_mean,
+        )
+        v_new = jax.tree.map(
+            lambda v, d: b2 * v + (1.0 - b2) * jnp.square(d.astype(jnp.float32)),
+            opt_state["v"], dy_mean,
+        )
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+        step = jax.tree.map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), m_new, v_new
+        )
+        x_new = jax.tree.map(
+            lambda xx, d: (xx + spec.eta_g * d).astype(xx.dtype), x, step
+        )
+        return x_new, {"m": m_new, "v": v_new, "t": t}, step
+
+
+_SERVER_OPTIMIZERS: Dict[str, ServerOptimizer] = {}
+
+
+def register_server_optimizer(opt: ServerOptimizer) -> ServerOptimizer:
+    assert opt.name, "ServerOptimizer subclasses must set a name"
+    _SERVER_OPTIMIZERS[opt.name] = opt
+    return opt
+
+
+def get_server_optimizer(name: str) -> ServerOptimizer:
+    try:
+        return _SERVER_OPTIMIZERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown server optimizer {name!r}; "
+            f"registered: {server_optimizer_names()}"
+        ) from None
+
+
+def server_optimizer_names() -> Tuple[str, ...]:
+    return tuple(sorted(_SERVER_OPTIMIZERS))
+
+
+for _o in (ServerSGD(), ServerMomentum(), ServerAdam()):
+    register_server_optimizer(_o)
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+
+def resolve_server_optimizer(spec) -> str:
+    """The spec's server optimizer, resolved against back-compat knobs:
+    an explicit ``spec.server_optimizer`` wins; else ``server_momentum>0``
+    selects heavy-ball (the pre-registry API); else the algorithm's
+    default."""
+    if getattr(spec, "server_optimizer", ""):
+        return spec.server_optimizer
+    if spec.server_momentum > 0.0:
+        return "momentum"
+    return get_algorithm(spec.algorithm).default_server_optimizer
+
+
+def init_server_state(spec, x) -> ServerState:
+    """Fresh ``ServerState`` for model ``x``: zero control variate + the
+    resolved server optimizer's initial slots."""
+    opt = get_server_optimizer(resolve_server_optimizer(spec))
+    return ServerState(x=x, c=tree_zeros_like(x), opt_state=opt.init(spec, x))

@@ -1,36 +1,46 @@
 """Host-side federated training controller.
 
 Owns:
-  * the server state (x, c) on device,
-  * the *full* N-client control-variate store on host (numpy, one slot per
-    client — the paper's "stateful clients"),
-  * the sampler and the per-round gather/scatter of sampled clients' c_i,
-  * the jitted round function.
+  * the typed ``ServerState`` (x, c, server-optimizer slots) on device,
+  * the *full* N-client host stores (numpy, one slot per client — the
+    paper's "stateful clients"): control variates, plus uplink
+    error-feedback residuals when ``spec.compress_uplink``,
+  * the sampler and the per-round gather/scatter of sampled clients'
+    round state (``ClientRoundState``),
+  * the jitted typed round function (``core/rounds.run_round``).
 
-The device program only ever sees the S sampled clients (DESIGN.md §2).
+The device program only ever sees the S sampled clients (DESIGN.md §2);
+algorithm behaviour and the server step come from the registries in
+``core/api.py`` (DESIGN.md §9), so the controller never branches on
+algorithm names.
 
 Execution is either synchronous (``pipeline_depth=0``, the seed
 behaviour) or pipelined (``pipeline_depth>=1``, DESIGN.md §8): the round
 function is dispatched asynchronously, the host prepares the next rounds'
-inputs (client sampling, c_i gather, ``dataset.round_batches``) while the
-device computes, and the ``ClientStateStore.scatter`` is deferred until
-the round's outputs are actually consumed. Prefetched c_i gathers that a
+inputs (client sampling, c_i/residual gathers, ``dataset.round_batches``)
+while the device computes, and the host-store scatters are deferred until
+the round's outputs are actually consumed. Prefetched gathers that a
 later scatter would invalidate are re-gathered row-wise, so the pipelined
 trajectory is bit-for-bit identical to the synchronous one.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rounds import federated_round
+from repro.core.api import (
+    ClientRoundState,
+    get_algorithm,
+    init_server_state,
+)
+from repro.core.rounds import run_round
 from repro.core.sampling import ClientSampler
-from repro.core.tree import tree_index, tree_zeros_like
+from repro.core.tree import tree_cast
 
 
 def make_grad_fn(loss_fn: Callable) -> Callable:
@@ -46,7 +56,8 @@ def make_grad_fn(loss_fn: Callable) -> Callable:
 
 
 class ClientStateStore:
-    """Host store of all N clients' control variates (numpy-backed)."""
+    """Host store of one per-client state pytree for all N clients
+    (numpy-backed; used for control variates and uplink residuals)."""
 
     def __init__(self, template, num_clients: int):
         self.num_clients = num_clients
@@ -60,8 +71,8 @@ class ClientStateStore:
     def gather(self, ids: np.ndarray):
         return jax.tree.unflatten(self._treedef, [l[ids] for l in self._leaves])
 
-    def scatter(self, ids: np.ndarray, c_i_new):
-        new_leaves = jax.tree.leaves(c_i_new)
+    def scatter(self, ids: np.ndarray, new):
+        new_leaves = jax.tree.leaves(new)
         for store_leaf, new_leaf in zip(self._leaves, new_leaves):
             store_leaf[ids] = np.asarray(new_leaf)
 
@@ -71,25 +82,39 @@ class ClientStateStore:
         )
 
 
+def _refresh_rows(prefetched, fresh, stale: np.ndarray) -> None:
+    """Overwrite the stale rows of a prefetched (mutable numpy) gather."""
+    for leaf, fresh_leaf in zip(jax.tree.leaves(prefetched),
+                                jax.tree.leaves(fresh)):
+        leaf[stale] = fresh_leaf
+
+
 class _RoundInputs(NamedTuple):
     """Host-prepared inputs of one round: sampled ids, their gathered c_i
-    (numpy, mutable — stale rows are re-gathered in place), data batches."""
+    and residuals (numpy, mutable — stale rows are re-gathered in place),
+    weights, data batches, and the host-RNG states *before* this round
+    was prepared (what a checkpoint must record to re-prepare it)."""
 
     ids: np.ndarray
     c_i: Any
+    uplink_res: Any
+    weights: Optional[np.ndarray]
     batches: Any
+    host_state: Dict[str, Any]
 
 
 class FederatedTrainer:
-    """Runs SCAFFOLD / FedAvg / FedProx / SGD rounds against a federated
-    dataset. ``dataset.round_batches(ids, K, b, rng)`` must return a pytree
-    with leaves (S, K, b, ...).
+    """Runs registered federated algorithms (scaffold / fedavg / fedprox /
+    sgd / scaffold_m / fedavgm / ...) against a federated dataset.
+    ``dataset.round_batches(ids, K, b, rng)`` must return a pytree with
+    leaves (S, K, b, ...); with ``spec.weighted_aggregation`` it must also
+    expose ``client_sizes(ids) -> (S,)`` per-client dataset sizes.
 
     ``pipeline_depth=0`` runs each round fully synchronously (sample,
     gather, load, execute, scatter — the seed semantics, bit-for-bit).
     ``pipeline_depth=d>=1`` keeps up to d rounds of host-side inputs
     prefetched while the device executes, overlapping data loading and
-    control-variate gathers with compute; trajectories are identical.
+    state gathers with compute; trajectories are identical.
     """
 
     def __init__(self, loss_fn, init_params, spec, dataset, *, seed: int = 0,
@@ -98,63 +123,129 @@ class FederatedTrainer:
         assert pipeline_depth >= 0, pipeline_depth
         self.spec = spec
         self.dataset = dataset
+        self.algorithm = get_algorithm(spec.algorithm)
+        if spec.weighted_aggregation and not hasattr(dataset, "client_sizes"):
+            raise ValueError(
+                "spec.weighted_aggregation=True needs the dataset to expose "
+                "client_sizes(ids); add it or disable weighting")
         key = jax.random.key(seed)
-        self.x = init_params(key)
-        self.c = tree_zeros_like(self.x)
-        self.momentum = (tree_zeros_like(self.x)
-                         if spec.server_momentum > 0.0 else None)
-        self.store = ClientStateStore(self.x, spec.num_clients)
+        self.server = init_server_state(spec, init_params(key))
+        self.store = ClientStateStore(self.server.x, spec.num_clients)
+        # uplink error-feedback residuals persist per client across rounds
+        # (fp32, like compression.compress_delta's carried error)
+        self.residual_store = (
+            ClientStateStore(tree_cast(self.server.x, jnp.float32),
+                             spec.num_clients)
+            if spec.compress_uplink else None)
         self.sampler = ClientSampler(spec.num_clients, spec.num_sampled, seed)
         self._rng = np.random.default_rng(seed + 1)
         grad_fn = make_grad_fn(loss_fn)
-        round_fn = partial(federated_round, grad_fn, spec,
-                           use_fused_update=use_fused_update)
-        self.round_fn = jax.jit(round_fn, donate_argnums=(0, 1, 2) if donate else ())
+
+        def round_fn(server, clients, batches):
+            return run_round(grad_fn, spec, server, clients, batches,
+                             use_fused_update=use_fused_update)
+
+        self.round_fn = jax.jit(round_fn,
+                                donate_argnums=(0, 1) if donate else ())
         self.round_idx = 0
         self.history = []
         self.pipeline_depth = int(pipeline_depth)
         self._prefetch: deque = deque()
 
     # ------------------------------------------------------------------
+    # back-compat views of the typed server state
+    # ------------------------------------------------------------------
+
+    @property
+    def x(self):
+        return self.server.x
+
+    @x.setter
+    def x(self, value):
+        self.server = dataclasses.replace(self.server, x=value)
+
+    @property
+    def c(self):
+        return self.server.c
+
+    @c.setter
+    def c(self, value):
+        self.server = dataclasses.replace(self.server, c=value)
+
+    @property
+    def momentum(self):
+        """Server heavy-ball slot, if the resolved optimizer is momentum
+        (adam's first moment is not a heavy-ball state and returns None)."""
+        from repro.core.api import resolve_server_optimizer
+
+        if resolve_server_optimizer(self.spec) == "momentum":
+            return self.server.opt_state.get("m")
+        return None
+
+    # ------------------------------------------------------------------
     # host-side round preparation (the work the pipeline overlaps)
     # ------------------------------------------------------------------
+
+    def host_rng_state(self) -> Dict[str, Any]:
+        """Sampler + data-RNG states as of the *next unprepared* round —
+        i.e. rewound past any prefetched inputs, so a restore re-prepares
+        them identically (checkpoint/checkpoint.py)."""
+        if self._prefetch:
+            return self._prefetch[0].host_state
+        return {"sampler": self.sampler.get_state(),
+                "data_rng": self._rng.bit_generator.state}
+
+    def set_host_rng_state(self, state: Dict[str, Any]) -> None:
+        self._prefetch.clear()
+        self.sampler.set_state(state["sampler"])
+        self._rng.bit_generator.state = state["data_rng"]
 
     def _prepare_inputs(self) -> _RoundInputs:
         """Sample → gather → load, in the exact host-RNG order of the
         synchronous loop (prefetching only moves the calls earlier in wall
         time, never reorders them across rounds)."""
+        host_state = {"sampler": self.sampler.get_state(),
+                      "data_rng": self._rng.bit_generator.state}
         ids = self.sampler.sample()
         c_i = self.store.gather(ids)
+        uplink_res = (self.residual_store.gather(ids)
+                      if self.residual_store is not None else None)
+        weights = None
+        if self.spec.weighted_aggregation:
+            weights = np.asarray(self.dataset.client_sizes(ids), np.float32)
         batches = self.dataset.round_batches(
             ids, self.spec.local_steps, self.spec.local_batch, self._rng
         )
-        return _RoundInputs(ids, c_i, batches)
+        return _RoundInputs(ids, c_i, uplink_res, weights, batches,
+                            host_state)
 
     def _refresh_stale_rows(self, inputs: _RoundInputs,
                             ids_written: np.ndarray) -> None:
-        """Re-gather the rows of a prefetched c_i that a scatter just
-        overwrote, restoring gather-at-launch-time semantics."""
+        """Re-gather the rows of a prefetched c_i / residual gather that a
+        scatter just overwrote, restoring gather-at-launch-time semantics."""
         stale = np.isin(inputs.ids, ids_written)
         if not stale.any():
             return
-        fresh = self.store.gather(inputs.ids[stale])
-        for leaf, fresh_leaf in zip(jax.tree.leaves(inputs.c_i),
-                                    jax.tree.leaves(fresh)):
-            leaf[stale] = fresh_leaf
+        stale_ids = inputs.ids[stale]
+        if self.algorithm.stateful_clients:
+            _refresh_rows(inputs.c_i, self.store.gather(stale_ids), stale)
+        if self.residual_store is not None:
+            _refresh_rows(inputs.uplink_res,
+                          self.residual_store.gather(stale_ids), stale)
 
     def _dispatch(self, inp: _RoundInputs):
         """Launch the jitted round (async dispatch — returns futures).
-        Unpacks the spec-dependent output arity; returns (c_i_new, metrics)
-        after storing x/c/momentum (still unmaterialised device arrays)."""
-        if self.spec.server_momentum > 0.0:
-            self.x, self.c, c_i_new, self.momentum, metrics = self.round_fn(
-                self.x, self.c, inp.c_i, inp.batches, self.momentum
-            )
-        else:
-            self.x, self.c, c_i_new, metrics = self.round_fn(
-                self.x, self.c, inp.c_i, inp.batches
-            )
-        return c_i_new, metrics
+        Stores the new ServerState (still unmaterialised device arrays);
+        returns the new ClientRoundState + metrics."""
+        clients = ClientRoundState(
+            c_i=inp.c_i,
+            uplink_residual=inp.uplink_res,
+            weights=(jnp.asarray(inp.weights)
+                     if inp.weights is not None else None),
+        )
+        out = self.round_fn(self.server, clients, inp.batches)
+        self.server = out.server
+        return out.clients, out.metrics
 
     # ------------------------------------------------------------------
     # round loop
@@ -166,14 +257,20 @@ class FederatedTrainer:
                    else self._prepare_inputs())
         else:
             inp = self._prepare_inputs()
-        c_i_new, metrics = self._dispatch(inp)
+        clients_new, metrics = self._dispatch(inp)
         # Overlap: while the device executes the dispatched round, prepare
         # the next rounds' inputs on the host. Nothing below blocks until
         # the scatter/metrics conversion actually needs the round outputs.
         while len(self._prefetch) < self.pipeline_depth:
             self._prefetch.append(self._prepare_inputs())
-        if self.spec.algorithm == "scaffold":
-            self.store.scatter(inp.ids, c_i_new)  # first sync point
+        scattered = False
+        if self.algorithm.stateful_clients:
+            self.store.scatter(inp.ids, clients_new.c_i)  # first sync point
+            scattered = True
+        if self.residual_store is not None:
+            self.residual_store.scatter(inp.ids, clients_new.uplink_residual)
+            scattered = True
+        if scattered:
             for pending in self._prefetch:
                 self._refresh_stale_rows(pending, inp.ids)
         self.round_idx += 1

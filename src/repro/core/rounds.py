@@ -1,11 +1,22 @@
 """One federated communication round, pure & jittable.
 
-``federated_round(grad_fn, spec, x, c, c_i, batches)`` implements
-Algorithm 1 (SCAFFOLD) and its ablations (FedAvg / FedProx / large-batch
-SGD) for the S *sampled* clients of the round. Client states for the
-unsampled N-S clients never enter the device program — the controller
-(repro.core.controller) scatters the returned `c_i_new` back into the host
-store, matching the paper's stateful-client semantics.
+``run_round(grad_fn, spec, server, clients, batches)`` is the typed
+entrypoint: it implements Algorithm 1 (SCAFFOLD) and every registered
+variant (FedAvg / FedProx / large-batch SGD / the momentum algorithms)
+for the S *sampled* clients of the round, taking a ``ServerState`` +
+``ClientRoundState`` and returning a fixed-arity ``RoundOutput``
+(DESIGN.md §9). Algorithm behaviour is dispatched through the
+``Algorithm`` registry and the server step through the
+``ServerOptimizer`` registry (``core/api.py``) — no string branching.
+
+``federated_round(...)`` is the thin back-compat shim over ``run_round``
+with the seed's positional-tuple signature; its trajectories are
+bit-for-bit identical to the typed path (tests/test_api_equivalence.py).
+
+Client states for the unsampled N-S clients never enter the device
+program — the controller (repro.core.controller) scatters the returned
+``c_i`` back into the host store, matching the paper's stateful-client
+semantics.
 
 ``use_fused_update=True`` routes every local step's update arithmetic
 through the packed Pallas path (one kernel launch per dtype group per
@@ -22,19 +33,25 @@ Two execution strategies with identical algorithm semantics (tested):
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
+from repro.core.api import (
+    ClientRoundState,
+    RoundOutput,
+    ServerState,
+    get_algorithm,
+    get_server_optimizer,
+    resolve_server_optimizer,
+)
 from repro.core.local_solver import local_sgd
 from repro.util import uscan
 from repro.core.tree import (
     tree_mean_leading,
     tree_norm,
-    tree_scale,
     tree_sub,
     tree_zeros_like,
 )
@@ -53,16 +70,10 @@ def client_update(grad_fn, spec, x, c, c_i, batches, uplink_res=None,
     — dy = y_K - x (model delta), dc = c_i_new - c_i (control delta) —
     plus the new uplink error-feedback residual when spec.compress_uplink.
     """
-    algo = spec.algorithm
-    correction = None
-    prox_center = None
-    prox_mu = 0.0
-    if algo == "scaffold":
-        # c - c_i, applied every local step (eq. 3)
-        correction = tree_sub(c, c_i)
-    elif algo == "fedprox":
-        prox_center = x
-        prox_mu = spec.fedprox_mu
+    algo = get_algorithm(spec.algorithm)
+    correction = algo.local_correction(spec, x, c, c_i)
+    prox_mu = algo.prox_mu(spec)
+    prox_center = x if prox_mu else None
 
     y, loss = local_sgd(
         grad_fn, x, batches, spec.eta_l,
@@ -71,22 +82,10 @@ def client_update(grad_fn, spec, x, c, c_i, batches, uplink_res=None,
     )
     dy = tree_sub(y, x)
 
-    if algo == "scaffold":
-        if spec.scaffold_option == "II":
-            # c_i+ = c_i - c + (x - y)/(K*eta_l)   (eq. 4, option II)
-            inv = 1.0 / (spec.local_steps * spec.eta_l)
-            c_i_new = jax.tree.map(
-                lambda ci, cc, xx, yy: (ci - cc + inv * (xx - yy)).astype(ci.dtype),
-                c_i, c, x, y,
-            )
-        else:
-            # c_i+ = g_i(x): extra pass over the client's round data (eq. 4, I)
-            g_at_x, _ = grad_fn(x, _merge_step_batches(batches))
-            c_i_new = jax.tree.map(lambda g, ci: g.astype(ci.dtype), g_at_x, c_i)
-        dc = tree_sub(c_i_new, c_i)
-    else:
-        c_i_new = c_i
-        dc = tree_zeros_like(c_i)
+    c_i_new, dc = algo.client_control_update(
+        spec, x, y, c, c_i,
+        lambda: grad_fn(x, _merge_step_batches(batches))[0],
+    )
     if spec.compress_uplink:
         from repro.core.compression import compress_delta, dequantize_int8
 
@@ -99,39 +98,44 @@ def client_update(grad_fn, spec, x, c, c_i, batches, uplink_res=None,
     return dy, dc, c_i_new, loss
 
 
-def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
-                    weights=None, uplink_res=None,
-                    use_fused_update: bool = False, shard_fn=None):
-    """One communication round over the S sampled clients.
+def _whole_batch_round(grad_fn, spec, server, clients, batches) -> RoundOutput:
+    """Large-batch SGD baseline: one server step on the whole round batch —
+    no local work, control variates, weights or server optimizer
+    (``FedRoundSpec.__post_init__`` rejects those combinations loudly)."""
+    flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[3:]), batches)
+    grads, metrics = grad_fn(server.x, flat)
+    x_new = jax.tree.map(
+        lambda xx, gg: (xx - spec.eta_l * gg).astype(xx.dtype),
+        server.x, grads,
+    )
+    out_metrics = {
+        "loss": metrics["loss"],
+        "drift": jnp.zeros((), jnp.float32),
+        "update_norm": tree_norm(tree_sub(x_new, server.x)),
+    }
+    return RoundOutput(
+        server=dataclasses.replace(server, x=x_new),
+        clients=clients,
+        metrics=out_metrics,
+    )
 
-    x, c: param-like pytrees (server model / server control variate).
-    c_i: pytree with leaves (S, ...) — sampled clients' control variates.
+
+def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
+              batches, use_fused_update: bool = False,
+              shard_fn=None) -> RoundOutput:
+    """One communication round over the S sampled clients (typed API).
+
+    server:  ``ServerState`` (x, c, server-optimizer slots).
+    clients: ``ClientRoundState`` — c_i / uplink residuals with leaves
+             (S, ...), optional (S,) aggregation weights.
     batches: pytree with leaves (S, K, b, ...).
-    momentum: server heavy-ball state (required iff spec.server_momentum>0);
-    when set the return becomes (x, c, c_i, momentum_new, metrics).
-    weights: optional (S,) client aggregation weights (paper §2 weighted
-    case; e.g. client dataset sizes) — normalised internally.
-    uplink_res: per-client error-feedback residuals (leaves (S, ...)) when
-    spec.compress_uplink; the new residuals are returned in metrics-position
-    order (x, c, c_i, [momentum], [uplink_res], metrics).
-    Returns (x_new, c_new, c_i_new, metrics).
     """
-    algo = spec.algorithm
+    algo = get_algorithm(spec.algorithm)
+    if algo.whole_batch:
+        return _whole_batch_round(grad_fn, spec, server, clients, batches)
 
-    if algo == "sgd":
-        # large-batch SGD baseline: one server step on the whole round batch
-        flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[3:]), batches)
-        grads, metrics = grad_fn(x, flat)
-        x_new = jax.tree.map(
-            lambda xx, gg: (xx - spec.eta_l * gg).astype(xx.dtype), x, grads
-        )
-        out_metrics = {
-            "loss": metrics["loss"],
-            "drift": jnp.zeros((), jnp.float32),
-            "update_norm": tree_norm(tree_sub(x_new, x)),
-        }
-        return x_new, c, c_i, out_metrics
-
+    x, c = server.x, server.c
+    c_i, weights = clients.c_i, clients.weights
     fn = partial(client_update, grad_fn, spec,
                  use_fused_update=use_fused_update,
                  shard_fn=shard_fn if spec.strategy == "client_sequential"
@@ -149,12 +153,12 @@ def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
                 wnorm, a.astype(jnp.float32), axes=(0, 0)).astype(a.dtype),
             tree_stacked)
 
-    uplink_res_new = None
+    uplink_res_new = clients.uplink_residual
     if spec.strategy == "client_parallel":
         if spec.compress_uplink:
             dy, dc, c_i_new, losses, uplink_res_new = jax.vmap(
                 fn, in_axes=(None, None, 0, 0, 0))(x, c, c_i, batches,
-                                                   uplink_res)
+                                                   clients.uplink_residual)
         else:
             dy, dc, c_i_new, losses = jax.vmap(
                 fn, in_axes=(None, None, 0, 0))(x, c, c_i, batches)
@@ -191,35 +195,69 @@ def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
         loss = loss_sum / s
         drift = tree_norm(dy_mean)
 
-    # server update (eq. 5 / alg 1 line 16-17); optional beyond-paper
-    # heavy-ball momentum on the aggregated update (FedAvgM-style)
-    momentum_new = None
-    if spec.server_momentum > 0.0:
-        assert momentum is not None, "pass momentum state for server_momentum"
-        momentum_new = jax.tree.map(
-            lambda m, d: (spec.server_momentum * m + d).astype(m.dtype),
-            momentum, dy_mean,
-        )
-        dy_mean = momentum_new
-    x_new = jax.tree.map(
-        lambda xx, d: (xx + spec.eta_g * d).astype(xx.dtype), x, dy_mean
-    )
-    if algo == "scaffold":
-        frac = spec.num_sampled / spec.num_clients
-        c_new = jax.tree.map(
-            lambda cc, d: (cc + frac * d).astype(cc.dtype), c, dc_mean
-        )
-    else:
-        c_new = c
+    # server update (eq. 5 / alg. 1 line 16-17) through the registered
+    # server optimizer (sgd / heavy-ball momentum / FedAdam)
+    opt = get_server_optimizer(resolve_server_optimizer(spec))
+    x_new, opt_state_new, applied = opt.apply(
+        spec, server.opt_state, x, dy_mean)
+    c_new = algo.server_control_update(spec, c, dc_mean)
     metrics = {
         "loss": loss,
         "drift": drift,
-        "update_norm": tree_norm(dy_mean),
+        "update_norm": tree_norm(applied),
     }
-    outs = [x_new, c_new, c_i_new]
-    if spec.server_momentum > 0.0:
-        outs.append(momentum_new)
+    return RoundOutput(
+        server=ServerState(x=x_new, c=c_new, opt_state=opt_state_new),
+        clients=ClientRoundState(c_i=c_i_new,
+                                 uplink_residual=uplink_res_new,
+                                 weights=weights),
+        metrics=metrics,
+    )
+
+
+def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
+                    weights=None, uplink_res=None,
+                    use_fused_update: bool = False, shard_fn=None):
+    """Back-compat shim over :func:`run_round` (the seed signature).
+
+    x, c: param-like pytrees (server model / server control variate).
+    c_i: pytree with leaves (S, ...) — sampled clients' control variates.
+    batches: pytree with leaves (S, K, b, ...).
+    momentum: server heavy-ball state — required whenever the spec resolves
+    to the momentum server optimizer (spec.server_momentum>0, or a
+    momentum-default algorithm like scaffold_m/fedavgm); the return then
+    becomes (x, c, c_i, momentum_new, metrics).
+    weights: optional (S,) client aggregation weights (paper §2 weighted
+    case; e.g. client dataset sizes) — normalised internally.
+    uplink_res: per-client error-feedback residuals (leaves (S, ...)) when
+    spec.compress_uplink; the new residuals are returned in metrics-position
+    order (x, c, c_i, [momentum], [uplink_res], metrics).
+    Returns (x_new, c_new, c_i_new, metrics).
+    """
+    opt_name = resolve_server_optimizer(spec)
+    assert opt_name in ("sgd", "momentum"), (
+        f"the tuple-shim only carries sgd/momentum server state; use "
+        f"run_round + ServerState for {opt_name!r}")
+    whole_batch = get_algorithm(spec.algorithm).whole_batch
+    if opt_name == "momentum" and not whole_batch:
+        # also covers the momentum-default algorithms (scaffold_m/fedavgm):
+        # without a threaded slot the heavy-ball state would silently reset
+        # every call and diverge from the typed path
+        assert momentum is not None, "pass momentum state for server_momentum"
+    opt_state = {"m": momentum} if momentum is not None else {}
+    out = run_round(
+        grad_fn, spec,
+        ServerState(x=x, c=c, opt_state=opt_state),
+        ClientRoundState(c_i=c_i, uplink_residual=uplink_res,
+                         weights=weights),
+        batches, use_fused_update=use_fused_update, shard_fn=shard_fn,
+    )
+    if whole_batch:
+        return out.server.x, out.server.c, out.clients.c_i, out.metrics
+    outs = [out.server.x, out.server.c, out.clients.c_i]
+    if opt_name == "momentum":
+        outs.append(out.server.opt_state["m"])
     if spec.compress_uplink:
-        outs.append(uplink_res_new)
-    outs.append(metrics)
+        outs.append(out.clients.uplink_residual)
+    outs.append(out.metrics)
     return tuple(outs)

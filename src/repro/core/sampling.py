@@ -1,6 +1,8 @@
 """Client sampling: uniform without replacement (paper §2)."""
 from __future__ import annotations
 
+from typing import Any, Dict
+
 import numpy as np
 
 
@@ -13,3 +15,11 @@ class ClientSampler:
     def sample(self) -> np.ndarray:
         return self._rng.choice(self.num_clients, size=self.num_sampled,
                                 replace=False)
+
+    # JSON-serializable RNG state, for exact checkpoint/resume of the
+    # sampling trajectory (checkpoint/checkpoint.py)
+    def get_state(self) -> Dict[str, Any]:
+        return self._rng.bit_generator.state
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self._rng.bit_generator.state = state

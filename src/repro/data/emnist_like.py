@@ -84,6 +84,10 @@ class EmnistLikeFederated:
             ys[si] = self.y[take].reshape(K, b)
         return {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
 
+    def client_sizes(self, ids: np.ndarray) -> np.ndarray:
+        """Per-client dataset sizes (paper §2 weighted aggregation)."""
+        return np.asarray([len(self.shards[i]) for i in ids], np.int64)
+
     def local_batch_size(self, batch_frac: float = 0.2) -> int:
         sizes = [len(s) for s in self.shards]
         return max(1, int(min(sizes) * batch_frac))

@@ -60,6 +60,11 @@ class QuadraticDataset:
                 self.b[ids][:, None, None], (s, K, b, self.dim))),
         }
 
+    def client_sizes(self, ids: np.ndarray) -> np.ndarray:
+        """Uniform: each simulated client owns one full objective (σ=0),
+        so weighted aggregation degenerates to the unweighted mean."""
+        return np.ones(len(ids), np.int64)
+
     def f(self, x) -> float:
         x = np.asarray(x)
         return float(0.5 * x @ self.A.mean(0) @ x + self.b.mean(0) @ x)

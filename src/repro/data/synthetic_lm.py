@@ -56,6 +56,11 @@ class SyntheticLMFederated:
             "labels": jnp.asarray(toks[..., 1:]),
         }
 
+    def client_sizes(self, ids: np.ndarray) -> np.ndarray:
+        """Vocabulary-slab sizes stand in for dataset sizes (the stream is
+        infinite); ``array_split`` makes them unequal when V % N != 0."""
+        return np.asarray([len(self.slices[i]) for i in ids], np.int64)
+
     def eval_batch(self, batch_size: int, rng) -> Dict:
         """I.i.d. mixture batch for global-model eval."""
         toks = np.stack([

@@ -15,10 +15,10 @@ from functools import partial
 import jax
 import numpy as np
 
-from repro.checkpoint import save_trainer
+from repro.checkpoint import load_trainer, save_trainer
 from repro.configs import get_config, get_reduced
 from repro.configs.base import FedRoundSpec
-from repro.core import FederatedTrainer
+from repro.core import FederatedTrainer, algorithm_names, server_optimizer_names
 from repro.data import SyntheticLMFederated
 from repro.models import model as M
 
@@ -52,7 +52,16 @@ def main(argv=None):
     ap.add_argument("--preset", default="reduced",
                     choices=["reduced", "100m", "full"])
     ap.add_argument("--algorithm", default="scaffold",
-                    choices=["scaffold", "fedavg", "fedprox", "sgd"])
+                    choices=list(algorithm_names()))
+    ap.add_argument("--server-opt", default="",
+                    choices=[""] + list(server_optimizer_names()),
+                    help="server optimizer ('' = algorithm default)")
+    ap.add_argument("--server-momentum", type=float, default=0.0)
+    ap.add_argument("--weighted", action="store_true",
+                    help="paper §2 weighted aggregation by client sizes")
+    ap.add_argument("--pipeline-depth", type=int, default=0)
+    ap.add_argument("--resume", default="",
+                    help="checkpoint to restore before training")
     ap.add_argument("--rounds", type=int, default=50)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--sampled", type=int, default=4)
@@ -76,6 +85,9 @@ def main(argv=None):
         local_batch=args.local_batch,
         eta_l=args.eta_l,
         eta_g=args.eta_g,
+        server_optimizer=args.server_opt,
+        server_momentum=args.server_momentum,
+        weighted_aggregation=args.weighted,
     )
     data = SyntheticLMFederated(args.clients, cfg.vocab_size, args.seq_len,
                                 heterogeneity=args.heterogeneity,
@@ -87,8 +99,11 @@ def main(argv=None):
 
     trainer = FederatedTrainer(
         partial(M.loss_fn, cfg), partial(M.init_params, cfg), spec, data,
-        seed=args.seed,
+        seed=args.seed, pipeline_depth=args.pipeline_depth,
     )
+    if args.resume:
+        load_trainer(args.resume, trainer)
+        print(f"resumed from {args.resume} at round {trainer.round_idx}")
     t0 = time.time()
     eval_rng = np.random.default_rng(args.seed + 7)
     eval_batch = data.eval_batch(8, eval_rng)

@@ -1,0 +1,212 @@
+"""Old-vs-new API equivalence (DESIGN.md §9 acceptance).
+
+The back-compat tuple shim (``federated_round``) and the typed-state path
+(``run_round`` over ServerState/ClientRoundState, which is also what
+``FederatedTrainer`` executes) must produce **bit-for-bit identical**
+trajectories across
+
+    {scaffold, fedavg, fedprox, sgd} x {momentum on/off}
+                                     x {client_parallel, client_sequential}
+
+plus the pipelined-controller and packed-fused-update combinations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FedRoundSpec
+from repro.core import (
+    ClientRoundState,
+    ClientSampler,
+    ClientStateStore,
+    FederatedTrainer,
+    ServerState,
+    federated_round,
+    init_server_state,
+    make_grad_fn,
+    resolve_server_optimizer,
+    run_round,
+)
+from repro.core.tree import tree_zeros_like
+from repro.data import make_similarity_quadratics, quadratic_loss
+from repro.kernels.scaffold_update import ops as fused_ops
+
+GRAD_FN = make_grad_fn(quadratic_loss)
+
+N, S, K, DIM = 10, 3, 4, 6
+
+
+def _spec(algo, *, momentum=0.0, strategy="client_parallel", **kw):
+    return FedRoundSpec(algorithm=algo, num_clients=N, num_sampled=S,
+                        local_steps=K, local_batch=1, eta_l=0.05,
+                        eta_g=0.7, server_momentum=momentum,
+                        strategy=strategy, **kw)
+
+
+def _init_params(key):
+    return {"x": jnp.ones((DIM,), jnp.float32)}
+
+
+def _run_shim_loop(spec, ds, rounds, seed=0, use_fused_update=False):
+    """The seed-era manual loop over the tuple shim, replicating the
+    controller's host semantics (sampler, RNG, store) exactly."""
+    sampler = ClientSampler(spec.num_clients, spec.num_sampled, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = _init_params(jax.random.key(seed))
+    c = tree_zeros_like(x)
+    expects_momentum = (resolve_server_optimizer(spec) == "momentum"
+                        and spec.algorithm != "sgd")
+    momentum = tree_zeros_like(x) if expects_momentum else None
+    store = ClientStateStore(x, spec.num_clients)
+    fn = jax.jit(lambda *a: federated_round(
+        GRAD_FN, spec, *a, use_fused_update=use_fused_update))
+    history = []
+    for _ in range(rounds):
+        ids = sampler.sample()
+        c_i = store.gather(ids)
+        batches = ds.round_batches(ids, spec.local_steps, spec.local_batch,
+                                   rng)
+        if expects_momentum:
+            x, c, c_i_new, momentum, m = fn(x, c, c_i, batches, momentum)
+        else:
+            x, c, c_i_new, m = fn(x, c, c_i, batches)
+        store.scatter(ids, c_i_new)
+        history.append({k: float(v) for k, v in m.items()})
+    return x, c, store, momentum, history
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+@pytest.mark.parametrize("strategy", ["client_parallel", "client_sequential"])
+@pytest.mark.parametrize("momentum", [0.0, 0.8])
+@pytest.mark.parametrize("algo", ["scaffold", "fedavg", "fedprox", "sgd"])
+def test_shim_equals_trainer_typed_path(algo, momentum, strategy):
+    """Full matrix: multi-round trajectory of the tuple-shim loop equals
+    the FederatedTrainer (typed run_round) trajectory bitwise."""
+    if algo == "sgd" and momentum:
+        pytest.skip("spec rejects server_momentum for whole-batch sgd")
+    spec = _spec(algo, momentum=momentum, strategy=strategy)
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, mu=0.3, seed=1)
+    x_s, c_s, store_s, mom_s, hist_s = _run_shim_loop(spec, ds, rounds=4)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0)
+    for _ in range(4):
+        tr.run_round()
+    _assert_tree_equal(x_s, tr.x)
+    _assert_tree_equal(c_s, tr.c)
+    _assert_tree_equal(store_s.gather(np.arange(N)),
+                       tr.store.gather(np.arange(N)))
+    if mom_s is not None:
+        _assert_tree_equal(mom_s, tr.momentum)
+    assert hist_s == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+@pytest.mark.parametrize("algo", ["scaffold_m", "fedavgm"])
+def test_shim_equals_trainer_momentum_default_algorithms(algo):
+    """The registry's momentum variants thread their heavy-ball slot
+    through the shim (explicitly) and the trainer (ServerState) to the
+    same bitwise trajectory."""
+    spec = _spec(algo)  # __post_init__ surfaces beta=0.9 on the spec
+    assert spec.server_momentum == 0.9
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, mu=0.3, seed=1)
+    x_s, c_s, store_s, mom_s, _ = _run_shim_loop(spec, ds, rounds=4)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0)
+    for _ in range(4):
+        tr.run_round()
+    _assert_tree_equal(x_s, tr.x)
+    _assert_tree_equal(c_s, tr.c)
+    _assert_tree_equal(mom_s, tr.momentum)
+    _assert_tree_equal(store_s.gather(np.arange(N)),
+                       tr.store.gather(np.arange(N)))
+
+
+@pytest.mark.parametrize("algo", ["scaffold", "fedavg", "fedprox", "sgd"])
+def test_shim_is_thin_over_run_round_single_round(algo):
+    """One round from random states: shim output == typed output, field
+    by field (the shim adds no arithmetic of its own)."""
+    spec = _spec(algo, momentum=0.0 if algo == "sgd" else 0.8)
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, seed=2)
+    rng = np.random.default_rng(3)
+    ids = np.arange(S)
+    batches = ds.round_batches(ids, K, 1, rng)
+    x = {"x": jnp.asarray(rng.normal(size=DIM).astype(np.float32))}
+    c = {"x": jnp.asarray(rng.normal(size=DIM).astype(np.float32) * 0.1)}
+    ci = {"x": jnp.asarray(rng.normal(size=(S, DIM)).astype(np.float32) * 0.1)}
+    mom = tree_zeros_like(x)
+
+    out = run_round(GRAD_FN, spec,
+                    ServerState(x=x, c=c, opt_state={"m": mom}),
+                    ClientRoundState(c_i=ci), batches)
+    if algo == "sgd":
+        x2, c2, ci2, m2 = federated_round(GRAD_FN, spec, x, c, ci, batches,
+                                          mom)
+        pairs = [(x2, out.server.x), (c2, out.server.c),
+                 (ci2, out.clients.c_i)]
+    else:
+        x2, c2, ci2, mom2, m2 = federated_round(GRAD_FN, spec, x, c, ci,
+                                                batches, mom)
+        pairs = [(x2, out.server.x), (c2, out.server.c),
+                 (ci2, out.clients.c_i), (mom2, out.server.opt_state["m"])]
+    for a, b in pairs:
+        _assert_tree_equal(a, b)
+    for k in m2:
+        np.testing.assert_array_equal(np.asarray(m2[k]),
+                                      np.asarray(out.metrics[k]))
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_shim_equals_pipelined_trainer(depth):
+    """Pipelined typed path (pipeline_depth>=1) stays bitwise equal to the
+    shim loop — the §8 parity guarantee survives the API redesign."""
+    spec = _spec("scaffold", momentum=0.8)
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, mu=0.3, seed=1)
+    x_s, c_s, store_s, _, _ = _run_shim_loop(spec, ds, rounds=5)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          pipeline_depth=depth)
+    for _ in range(5):
+        tr.run_round()
+    _assert_tree_equal(x_s, tr.x)
+    _assert_tree_equal(c_s, tr.c)
+    _assert_tree_equal(store_s.gather(np.arange(N)),
+                       tr.store.gather(np.arange(N)))
+
+
+def test_shim_equals_trainer_fused_update():
+    """use_fused_update=True (packed Pallas path, interpret mode on CPU):
+    shim loop and typed trainer stay bitwise equal."""
+    spec = _spec("scaffold")
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, mu=0.3, seed=1)
+    with fused_ops.force_interpret():
+        x_s, c_s, store_s, _, _ = _run_shim_loop(spec, ds, rounds=3,
+                                                 use_fused_update=True)
+        tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                              use_fused_update=True)
+        for _ in range(3):
+            tr.run_round()
+    _assert_tree_equal(x_s, tr.x)
+    _assert_tree_equal(store_s.gather(np.arange(N)),
+                       tr.store.gather(np.arange(N)))
+
+
+def test_typed_state_round_trip_through_jit_donation():
+    """ServerState/ClientRoundState jit, donate, and keep fixed arity for
+    every registered algorithm (no spec-dependent output unpacking)."""
+    spec = _spec("scaffold")
+    ds = make_similarity_quadratics(N, DIM, delta=0.2, G=3.0, seed=0)
+    rng = np.random.default_rng(0)
+    server = init_server_state(spec, _init_params(jax.random.key(0)))
+    clients = ClientRoundState(
+        c_i={"x": jnp.zeros((S, DIM), jnp.float32)})
+    batches = ds.round_batches(np.arange(S), K, 1, rng)
+    fn = jax.jit(lambda s, cl, b: run_round(GRAD_FN, spec, s, cl, b),
+                 donate_argnums=(0, 1))
+    out = fn(server, clients, batches)
+    assert isinstance(out.server, ServerState)
+    assert isinstance(out.clients, ClientRoundState)
+    assert set(out.metrics) == {"loss", "drift", "update_norm"}
