@@ -1,0 +1,36 @@
+"""Validate BENCH_*.json files against the scaffold-bench/v1 schema.
+
+Usage: check_bench_json.py <file> [<file> ...]
+"""
+
+import json
+import sys
+
+ROUND_MODES = {"sync", "pipelined", "scanned"}
+
+
+def check(path: str) -> None:
+    with open(path, encoding="utf-8") as f:
+        payload = json.load(f)
+    assert payload["schema"] == "scaffold-bench/v1", payload.get("schema")
+    assert payload["bench"], f"{path}: missing bench name"
+    records = payload["records"]
+    assert records, f"{path}: no records"
+    for record in records:
+        assert isinstance(record, dict), record
+    if payload["bench"] == "round":
+        for record in records:
+            assert record["arch"], record
+            assert record["mode"] in ROUND_MODES, record
+            assert record["rounds_per_s"] > 0, record
+            assert "kernel_launches_per_step_packed" in record, record
+    print(f"{path}: ok ({len(records)} records, bench={payload['bench']!r})")
+
+
+def main() -> None:
+    for path in sys.argv[1:]:
+        check(path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Fail when a pytest -rs report contains skips caused by missing optional
+dependencies (importorskip), so the property tests provably execute in CI.
+
+Usage: check_skips.py <pytest_output_file>
+"""
+
+import re
+import sys
+from pathlib import Path
+
+PATTERN = re.compile(r"SKIPPED.*(could not import|No module named)")
+
+
+def main() -> None:
+    text = Path(sys.argv[1]).read_text(encoding="utf-8")
+    bad = [line for line in text.splitlines() if PATTERN.search(line)]
+    if bad:
+        print("missing-optional-dependency skips detected:")
+        for line in bad:
+            print(" ", line)
+        sys.exit(1)
+    print("no missing-dependency skips")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Print one round-robin shard of the tier-1 test files.
+
+Usage: shard_tests.py <shard_index> <num_shards>
+"""
+
+import sys
+from pathlib import Path
+
+
+def main() -> None:
+    shard, num_shards = int(sys.argv[1]), int(sys.argv[2])
+    files = sorted(Path("tests").glob("test_*.py"))
+    picked = [str(f) for i, f in enumerate(files) if i % num_shards == shard]
+    print(" ".join(picked))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,25 +12,28 @@
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import bench_cli
 from repro.configs.base import FedRoundSpec
 from repro.core import FederatedTrainer
 from repro.data import make_similarity_quadratics, quadratic_loss
 
 
-def _run(spec, ds, rounds=80, seed=0):
+def _run(spec, ds, rounds, seed=0):
+    # one on-device scan per ablation cell (DESIGN.md §10) — the sweep's
+    # cost is one dispatch per spec, not one per round
     init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
-    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed)
-    for _ in range(rounds):
-        tr.run_round()
+    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed,
+                          scan_rounds=rounds)
+    tr.run(rounds)
     return ds.suboptimality(tr.x)
 
 
 def run(fast: bool = True):
+    # smoke mode (CI bench job): same sweep, fewer rounds
+    rounds = 20 if fast else 80
     ds = make_similarity_quadratics(20, 10, delta=0.3, G=8.0, mu=0.3, seed=3)
     rows = []
     base = dict(num_clients=20, num_sampled=4, local_steps=10, local_batch=1)
@@ -39,33 +42,36 @@ def run(fast: bool = True):
         for eta_g, eta_l in [(1.0, 0.1), (np.sqrt(s), 0.1 / np.sqrt(s))]:
             spec = FedRoundSpec(algorithm=algo, eta_l=eta_l, eta_g=eta_g,
                                 **base)
-            sub = _run(spec, ds)
+            sub = _run(spec, ds, rounds)
             rows.append({"ablation": "two_stepsizes", "algo": algo,
-                         "eta_g": round(eta_g, 2), "suboptimality": sub})
+                         "rounds": rounds, "eta_g": round(eta_g, 2),
+                         "suboptimality": sub})
     for algo in ("fedavg", "scaffold"):
         for beta in (0.0, 0.8):
             spec = FedRoundSpec(algorithm=algo, eta_l=0.1,
                                 eta_g=(1 - beta), server_momentum=beta,
                                 **base)
-            sub = _run(spec, ds)
+            sub = _run(spec, ds, rounds)
             rows.append({"ablation": "server_momentum", "algo": algo,
-                         "beta": beta, "suboptimality": sub})
+                         "rounds": rounds, "beta": beta,
+                         "suboptimality": sub})
     for algo in ("fedavg", "scaffold"):
         for opt, eta_g in (("sgd", 1.0), ("momentum", 0.2), ("adam", 0.03)):
             spec = FedRoundSpec(algorithm=algo, eta_l=0.1, eta_g=eta_g,
                                 server_optimizer=opt,
                                 server_momentum=0.8 if opt == "momentum"
                                 else 0.0, **base)
-            sub = _run(spec, ds)
+            sub = _run(spec, ds, rounds)
             rows.append({"ablation": "server_optimizer", "algo": algo,
-                         "opt": opt, "suboptimality": sub})
+                         "rounds": rounds, "opt": opt,
+                         "suboptimality": sub})
     return rows
 
 
 def main(fast: bool = True):
     rows = run(fast)
-    print("ablation: server update variants (suboptimality after 80 rounds,"
-          " 20% sampling, K=10, G=8)")
+    print(f"ablation: server update variants (suboptimality after "
+          f"{rows[0]['rounds']} rounds, 20% sampling, K=10, G=8)")
     for r in rows:
         knob = (f"eta_g={r['eta_g']}" if "eta_g" in r
                 else f"beta={r['beta']}" if "beta" in r
@@ -76,4 +82,4 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli("ablation_server", main)

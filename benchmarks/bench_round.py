@@ -1,39 +1,51 @@
 """Microbenchmark: wall time per federated round (reduced LM archs, CPU).
 
-Per arch, times the full FederatedTrainer round loop — host sampling +
-c_i gather + data loading + device round — in both execution modes:
+Per arch, times the full FederatedTrainer round loop in the three
+execution modes (DESIGN.md §8/§10):
 
   sync       pipeline_depth=0 (seed semantics: host work serialises with
              device compute)
   pipelined  pipeline_depth=1 (host work for round r+1 overlaps the device
-             execution of round r — DESIGN.md §8)
+             execution of round r)
+  scanned    scan_rounds=R (the round loop itself is one on-device
+             lax.scan chunk: device cohort sampling, device-resident c_i
+             store, device data gathers — zero host round trips)
 
 and reports the per-local-step kernel-launch counts of the fused-update
 paths (per-leaf vs packed, via jaxpr inspection in interpret mode).
-Emits the us_per_call numbers for benchmarks.run's CSV.
+Emits one ``scaffold-bench/v1`` record per (arch, mode) —
+``python -m benchmarks.bench_round`` writes them to ``BENCH_round.json``
+(the CI perf-trajectory artifact).
 """
 from __future__ import annotations
 
-import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.common import bench_argparser, bench_cli
 from repro.configs import get_reduced
 from repro.configs.base import FedRoundSpec
 from repro.core import FederatedTrainer
-from repro.data import SyntheticLMFederated
+from repro.data import SyntheticLMFederated, make_similarity_quadratics, quadratic_loss
 from repro.kernels.scaffold_update import ops as fused_ops
 from repro.models import init_params, loss_fn
 
 ARCHS = ("llama3.2-3b", "gemma3-1b", "mamba2-2.7b", "qwen2-moe-a2.7b",
          "hymba-1.5b")
 SEQ_LEN = 128
+MODES = ("sync", "pipelined", "scanned")
+# the small-model row: paper-style quadratic clients, where per-round host
+# dispatch — not device math — dominates the sync loop. This is the
+# scanned engine's design point (thousands of Fig.3/Table-3 rounds), so
+# it gets a paper-scale chunk regardless of --iters.
+QUAD_ARCH = "quadratics-n20-d20"
+QUAD_ITERS = 64
 
 
-def _make_trainer(cfg, *, pipeline_depth: int, seed: int = 0):
+def _make_trainer(cfg, *, pipeline_depth: int = 0, scan_rounds: int = 0,
+                  seed: int = 0):
     spec = FedRoundSpec(algorithm="scaffold", num_clients=8, num_sampled=4,
                         local_steps=4, local_batch=2, eta_l=0.01)
     dataset = SyntheticLMFederated(spec.num_clients, cfg.vocab_size, SEQ_LEN,
@@ -42,22 +54,52 @@ def _make_trainer(cfg, *, pipeline_depth: int, seed: int = 0):
         lambda p, b: loss_fn(cfg, p, b),
         lambda key: init_params(cfg, key),
         spec, dataset, seed=seed, pipeline_depth=pipeline_depth,
+        scan_rounds=scan_rounds,
     )
 
 
-def bench_arch(arch: str, *, iters: int = 3):
-    """Returns (us_sync, us_pipelined) per round."""
-    cfg = get_reduced(arch)
+def _time_modes(make_trainer, iters: int):
+    """us-per-round of a trainer factory in each execution mode."""
     out = {}
-    for mode, depth in (("sync", 0), ("pipelined", 1)):
-        tr = _make_trainer(cfg, pipeline_depth=depth)
-        tr.run_round()  # compile + first prefetch outside the timed region
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            tr.run_round()
-        jax.block_until_ready(tr.x)
+    for mode in MODES:
+        if mode == "scanned":
+            tr = make_trainer(scan_rounds=iters)
+            assert tr.scan_active, tr.scan_fallback_reason
+            tr.run(iters)  # compile the R=iters chunk outside timing
+            t0 = time.perf_counter()
+            tr.run(iters)
+            jax.block_until_ready(tr.x)
+        else:
+            tr = make_trainer(
+                pipeline_depth=1 if mode == "pipelined" else 0)
+            tr.run_round()  # compile + first prefetch outside timing
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                tr.run_round()
+            jax.block_until_ready(tr.x)
         out[mode] = (time.perf_counter() - t0) / iters * 1e6
-    return out["sync"], out["pipelined"]
+    return out
+
+
+def bench_arch(arch: str, *, iters: int = 3):
+    """us-per-round for each execution mode: {mode: us}."""
+    cfg = get_reduced(arch)
+    return _time_modes(lambda **kw: _make_trainer(cfg, **kw), iters)
+
+
+def bench_quadratics(*, iters: int = QUAD_ITERS, seed: int = 0):
+    """The dispatch-bound small-model benchmark (N=20, d=20 quadratics)."""
+    ds = make_similarity_quadratics(20, 20, delta=0.3, G=8.0, mu=0.3,
+                                    seed=seed)
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=20, num_sampled=4,
+                        local_steps=10, local_batch=1, eta_l=0.1)
+
+    def make_trainer(**kw):
+        init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+        return FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed,
+                                **kw)
+
+    return _time_modes(make_trainer, iters)
 
 
 def kernel_launch_counts(arch: str):
@@ -79,34 +121,66 @@ def kernel_launch_counts(arch: str):
     return n_leaves, n_leaf_path, n_packed_path
 
 
-def main(archs=ARCHS, *, iters: int = 3):
+def _mode_rows(arch, us, extra=None):
     rows = []
-    for arch in archs:
-        us_sync, us_pipe = bench_arch(arch, iters=iters)
-        leaves, n_leaf, n_packed = kernel_launch_counts(arch)
-        rows.append({
+    for mode in MODES:
+        row = {
+            "bench": "round",
             "arch": arch,
-            "us_per_round": us_sync,
-            "us_per_round_pipelined": us_pipe,
-            "speedup": us_sync / max(us_pipe, 1e-9),
-            "param_leaves": leaves,
-            "launches_per_step_leaf": n_leaf,
-            "launches_per_step_packed": n_packed,
-        })
-        print(f"round_{arch}: sync {us_sync/1e3:8.1f} ms/round | "
-              f"pipelined {us_pipe/1e3:8.1f} ms/round "
-              f"({us_sync/max(us_pipe, 1e-9):.2f}x) | fused launches/step: "
-              f"{n_leaf} per-leaf -> {n_packed} packed "
-              f"({leaves} param leaves)")
+            "mode": mode,
+            "us_per_round": us[mode],
+            "rounds_per_s": 1e6 / max(us[mode], 1e-9),
+            "speedup_vs_sync": us["sync"] / max(us[mode], 1e-9),
+        }
+        row.update(extra or {})
+        rows.append(row)
     return rows
 
 
+def _print_arch(arch, us, tail=""):
+    print(f"round_{arch}: "
+          f"sync {us['sync']/1e3:8.1f} ms/round | "
+          f"pipelined {us['pipelined']/1e3:8.1f} ms/round "
+          f"({us['sync']/max(us['pipelined'], 1e-9):.2f}x) | "
+          f"scanned {us['scanned']/1e3:8.1f} ms/round "
+          f"({us['sync']/max(us['scanned'], 1e-9):.2f}x)" + tail)
+
+
+def run(archs=ARCHS, *, iters: int = 3):
+    """One BENCH record per (arch, mode); the quadratics/small-model row
+    always rides along (it is the scanned engine's acceptance gate)."""
+    rows = []
+    us_q = bench_quadratics()
+    rows += _mode_rows(QUAD_ARCH, us_q,
+                       {"scan_chunk": QUAD_ITERS,
+                        "kernel_launches_per_step_leaf": 0,
+                        "kernel_launches_per_step_packed": 0})
+    _print_arch(QUAD_ARCH, us_q, f" | scan chunk {QUAD_ITERS}")
+    for arch in archs:
+        us = bench_arch(arch, iters=iters)
+        leaves, n_leaf, n_packed = kernel_launch_counts(arch)
+        rows += _mode_rows(arch, us, {
+            "scan_chunk": iters,
+            "param_leaves": leaves,
+            "kernel_launches_per_step_leaf": n_leaf,
+            "kernel_launches_per_step_packed": n_packed,
+        })
+        _print_arch(arch, us,
+                    f" | fused launches/step: {n_leaf} per-leaf -> "
+                    f"{n_packed} packed ({leaves} param leaves)")
+    return rows
+
+
+def main(fast: bool = True, archs=",".join(ARCHS), iters: int = 3):
+    del fast  # this script's scale rides on --archs/--iters (no --full)
+    return run(tuple(a.strip() for a in archs.split(",") if a.strip()),
+               iters=iters)
+
+
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
     ap.add_argument("--archs", default=",".join(ARCHS),
                     help="comma list of reduced arch names")
     ap.add_argument("--iters", type=int, default=3,
-                    help="timed rounds per mode")
-    args = ap.parse_args()
-    main(tuple(a.strip() for a in args.archs.split(",") if a.strip()),
-         iters=args.iters)
+                    help="timed rounds per mode (also the scan chunk size)")
+    bench_cli("round", main, parser=ap, forward=("archs", "iters"))

@@ -1,12 +1,26 @@
-"""Shared helpers for the paper-table benchmarks."""
+"""Shared helpers for the benchmarks: model/trainer construction for the
+paper tables, and the one arg/emit pipeline every script uses —
+
+  ``bench_cli(name, main)``     the common ``__main__`` plumbing
+                                (--full / --out-json), shared by run.py
+                                and the fig3/table3/table4/table5/
+                                ablation/round scripts
+  ``write_bench_json``          the machine-readable ``BENCH_<name>.json``
+                                emitter (schema ``scaffold-bench/v1``:
+                                top-level {schema, bench, records}; round
+                                records carry arch / mode ∈ {sync,
+                                pipelined, scanned} / rounds_per_s /
+                                kernel launches) — what CI uploads as the
+                                perf-trajectory artifact
+"""
 from __future__ import annotations
 
-import time
-from typing import Dict, Optional
+import argparse
+import json
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FedRoundSpec
 from repro.core import FederatedTrainer
@@ -25,29 +39,97 @@ MODELS = {
     "mlp": (mlp_init, mlp_loss, mlp_logits),
 }
 
+BENCH_SCHEMA = "scaffold-bench/v1"
+
+
+def write_bench_json(name: str, records: List[Dict], path: str = "") -> str:
+    """Write ``BENCH_<name>.json`` (or ``path``) and return the path.
+
+    Every benchmark emits the same envelope so CI artifacts and the perf
+    trajectory stay greppable across benches:
+    ``{"schema": "scaffold-bench/v1", "bench": <name>, "records": [...]}``
+    with one flat dict per measured configuration.
+    """
+    path = path or f"BENCH_{name}.json"
+    payload = {"schema": BENCH_SCHEMA, "bench": name,
+               "records": [dict(r) for r in records]}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def bench_argparser(description: str = "",
+                    full_flag: bool = True) -> argparse.ArgumentParser:
+    """The shared benchmark CLI surface (scripts add their own extras).
+    ``full_flag=False`` is for scripts whose scale rides on other knobs
+    (bench_round's --archs/--iters) so --full can't mislead."""
+    ap = argparse.ArgumentParser(description=description)
+    if full_flag:
+        ap.add_argument("--full", action="store_true",
+                        help="paper-scale settings "
+                             "(default: fast smoke pass)")
+    ap.add_argument("--out-json", default="",
+                    help="output path for the BENCH json "
+                         "('' = ./BENCH_<name>.json, '-' = don't write)")
+    return ap
+
+
+def bench_cli(name: str, main_fn, argv=None, parser=None, forward=()):
+    """Shared ``__main__`` plumbing: parse the common flags (plus any the
+    script added to ``parser``), run ``main_fn(fast=..., <forwarded>)``,
+    emit ``BENCH_<name>.json``."""
+    ap = parser or bench_argparser()
+    args = ap.parse_args(argv)
+    extras = {k: getattr(args, k) for k in forward}
+    rows = main_fn(fast=not getattr(args, "full", False), **extras)
+    if args.out_json != "-":
+        print("wrote", write_bench_json(name, rows, args.out_json))
+    return rows
+
 
 def make_emnist(num_clients: int, samples: int, similarity: float, seed: int = 0):
     return EmnistLikeFederated(num_clients=num_clients, samples=samples,
                                similarity_pct=similarity, seed=seed)
 
 
-def rounds_to_target(data, algo: str, *, K: int, eta: float, target: float,
-                     num_clients: int, num_sampled: int, local_batch: int,
-                     max_rounds: int, model: str = "logreg",
-                     seed: int = 0, eval_every: int = 2) -> int:
+def make_table_trainer(data, algo: str, *, K: int, eta: float,
+                       num_clients: int, num_sampled: int, local_batch: int,
+                       model: str, seed: int = 0, scan_rounds: int = 0):
+    """One trainer + jitted test-accuracy fn for the EMNIST-like tables.
+    ``scan_rounds>0`` runs the on-device scanned engine (DESIGN.md §10),
+    which is what makes the paper-scale table sweeps feasible."""
     init_fn, loss_fn, logits_fn = MODELS[model]
     spec = FedRoundSpec(algorithm=algo, num_clients=num_clients,
                         num_sampled=num_sampled, local_steps=K,
                         local_batch=local_batch, eta_l=eta)
     tr = FederatedTrainer(loss_fn, lambda k: init_fn(k, 784, 62), spec, data,
-                          seed=seed)
+                          seed=seed, scan_rounds=scan_rounds)
     tb = data.test_batch()
     acc_fn = jax.jit(
         lambda p: jnp.mean(jnp.argmax(logits_fn(p, tb), -1) == tb["y"]))
-    for r in range(max_rounds):
-        tr.run_round()
-        if (r + 1) % eval_every == 0 and float(acc_fn(tr.x)) >= target:
-            return r + 1
+    return tr, acc_fn
+
+
+def rounds_to_target(data, algo: str, *, K: int, eta: float, target: float,
+                     num_clients: int, num_sampled: int, local_batch: int,
+                     max_rounds: int, model: str = "logreg",
+                     seed: int = 0, eval_every: int = 2,
+                     scan_rounds: int = 0) -> int:
+    tr, acc_fn = make_table_trainer(
+        data, algo, K=K, eta=eta, num_clients=num_clients,
+        num_sampled=num_sampled, local_batch=local_batch, model=model,
+        seed=seed, scan_rounds=scan_rounds)
+    eval_fn = lambda p: {"accuracy": float(acc_fn(p))}
+    used = tr.run(max_rounds, eval_fn=eval_fn, eval_every=eval_every,
+                  target_metric=target)
+    if used < max_rounds:
+        return used
+    # used == max_rounds is ambiguous (early-stop at the last round vs ran
+    # out); re-evaluate to disambiguate — but only when the final round is
+    # on the eval grid, matching the seed loop's schedule exactly
+    if max_rounds % eval_every == 0 and float(acc_fn(tr.x)) >= target:
+        return used
     return max_rounds + 1  # "max+" marker
 
 
@@ -58,19 +140,17 @@ def best_rounds_over_etas(data, algo: str, etas, **kw) -> int:
 
 def final_accuracy(data, algo: str, *, K: int, eta: float, num_clients: int,
                    num_sampled: int, local_batch: int, rounds: int,
-                   model: str = "mlp", seed: int = 0) -> float:
-    init_fn, loss_fn, logits_fn = MODELS[model]
-    spec = FedRoundSpec(algorithm=algo, num_clients=num_clients,
-                        num_sampled=num_sampled, local_steps=K,
-                        local_batch=local_batch, eta_l=eta)
-    tr = FederatedTrainer(loss_fn, lambda k: init_fn(k, 784, 62), spec, data,
-                          seed=seed)
-    tb = data.test_batch()
-    acc_fn = jax.jit(
-        lambda p: jnp.mean(jnp.argmax(logits_fn(p, tb), -1) == tb["y"]))
-    best = 0.0
-    for r in range(rounds):
-        tr.run_round()
-        if (r + 1) % 5 == 0:
+                   model: str = "mlp", seed: int = 0,
+                   scan_rounds: int = 0) -> float:
+    tr, acc_fn = make_table_trainer(
+        data, algo, K=K, eta=eta, num_clients=num_clients,
+        num_sampled=num_sampled, local_batch=local_batch, model=model,
+        seed=seed, scan_rounds=scan_rounds)
+    best, done = 0.0, 0
+    while done < rounds:
+        step = min(5, rounds - done)
+        tr.run(step)
+        done += step
+        if done % 5 == 0:
             best = max(best, float(acc_fn(tr.x)))
     return max(best, float(acc_fn(tr.x)))

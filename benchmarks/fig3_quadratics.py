@@ -1,11 +1,18 @@
 """Figure 3 reproduction: simulated quadratics (N=2, σ=0, full
 participation). FedAvg slows with K and G; SCAFFOLD improves with K and is
-invariant to G; SGD is the G-independent baseline."""
+invariant to G; SGD is the G-independent baseline.
+
+Runs on the scanned engine (``scan_rounds`` — DESIGN.md §10): each
+configuration's whole round trajectory is one on-device ``lax.scan``, so
+the sweep costs one dispatch per (G, algo, K) cell instead of one per
+round — the regime change that makes the paper's thousands-of-rounds
+curves cheap to regenerate.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.common import bench_cli
 from repro.configs.base import FedRoundSpec
 from repro.core import FederatedTrainer
 from repro.data import make_paper_fig3, quadratic_loss
@@ -20,11 +27,11 @@ def run(rounds: int = 60, eta_l: float = 0.1):
             spec = FedRoundSpec(algorithm=algo, num_clients=2, num_sampled=2,
                                 local_steps=K, local_batch=1, eta_l=eta_l)
             init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
-            tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0)
-            for _ in range(rounds):
-                tr.run_round()
+            tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0,
+                                  scan_rounds=rounds)
+            tr.run(rounds)
             rows.append({
-                "G": G, "algo": algo, "K": K,
+                "G": G, "algo": algo, "K": K, "rounds": rounds,
                 "suboptimality": ds.suboptimality(tr.x),
             })
     return rows
@@ -46,4 +53,4 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli("fig3_quadratics", main)

@@ -5,7 +5,7 @@ client similarity. 1 epoch = 5 local steps (batch = 0.2 of local data),
 """
 from __future__ import annotations
 
-from benchmarks.common import best_rounds_over_etas, make_emnist
+from benchmarks.common import bench_cli, best_rounds_over_etas, make_emnist
 
 ETAS = (0.3, 1.0, 3.0)
 
@@ -23,7 +23,7 @@ def run(*, fast: bool = False, target: float = 0.5):
         lb = data.local_batch_size(0.2)
         base = dict(num_clients=num_clients, num_sampled=num_sampled,
                     local_batch=lb, target=target, max_rounds=max_rounds,
-                    model="logreg")
+                    model="logreg", scan_rounds=2)
         r_sgd = best_rounds_over_etas(data, "sgd", ETAS, K=1, **base)
         for epochs in epochs_list:
             K = 5 * epochs  # 5 steps per epoch (batch 0.2 of local data)
@@ -59,4 +59,4 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    bench_cli("table3_epochs", main)

@@ -3,7 +3,7 @@ accuracy as the sampled fraction shrinks (20% -> 5%), at 0%/10%
 similarity. Expect sub-linear slow-down, better with higher similarity."""
 from __future__ import annotations
 
-from benchmarks.common import best_rounds_over_etas, make_emnist
+from benchmarks.common import bench_cli, best_rounds_over_etas, make_emnist
 
 ETAS = (0.3, 1.0, 3.0)
 
@@ -25,7 +25,7 @@ def run(*, fast: bool = False, target: float = 0.45):
                 r = best_rounds_over_etas(
                     data, algo, ETAS, K=25, target=target,
                     num_clients=num_clients, num_sampled=s, local_batch=lb,
-                    max_rounds=max_rounds, model="logreg")
+                    max_rounds=max_rounds, model="logreg", scan_rounds=2)
                 if base_rounds is None:
                     base_rounds = r
                 rows.append({
@@ -55,4 +55,4 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    bench_cli("table4_sampling", main)

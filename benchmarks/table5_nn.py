@@ -3,7 +3,7 @@ network (non-convex), 5 epochs per round, 20% client sampling, at 0%/10%
 similarity. Expected ordering: SCAFFOLD > FedAvg > SGD."""
 from __future__ import annotations
 
-from benchmarks.common import final_accuracy, make_emnist
+from benchmarks.common import bench_cli, final_accuracy, make_emnist
 
 
 def run(*, fast: bool = False):
@@ -19,7 +19,8 @@ def run(*, fast: bool = False):
             acc = final_accuracy(data, algo, K=K, eta=eta,
                                  num_clients=num_clients,
                                  num_sampled=max(1, num_clients // 5),
-                                 local_batch=lb, rounds=rounds, model="mlp")
+                                 local_batch=lb, rounds=rounds, model="mlp",
+                                 scan_rounds=5)
             rows.append({"similarity": sim, "algo": algo, "accuracy": acc})
     return rows
 
@@ -35,4 +36,4 @@ def main(fast: bool = True):
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    bench_cli("table5_nn", main)

@@ -58,7 +58,10 @@ def load_checkpoint(path: str, template) -> Tuple[Any, Dict[str, Any]]:
 
 def _trainer_tree(trainer) -> Dict[str, Any]:
     """The trainer's array state as a plain dict (stable checkpoint keys,
-    independent of the registered-dataclass pytree paths)."""
+    independent of the registered-dataclass pytree paths). A scan-mode
+    trainer first mirrors its device-resident client store into the host
+    store, so the same keys cover all three execution modes."""
+    trainer.sync_host_store()
     all_ids = np.arange(trainer.store.num_clients)
     tree = {
         "x": trainer.server.x,
@@ -97,6 +100,7 @@ def load_trainer(path: str, trainer):
     trainer.store.scatter(all_ids, tree["store"])
     if trainer.residual_store is not None:
         trainer.residual_store.scatter(all_ids, tree["residuals"])
+    trainer.push_host_store_to_device()
     trainer.round_idx = int(extra.get("round", 0))
     if "host_rng" in extra:
         trainer.set_host_rng_state(extra["host_rng"])

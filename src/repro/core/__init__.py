@@ -3,9 +3,13 @@
 Entry points:
   run_round        — one pure/jittable communication round over typed
                      states (ServerState/ClientRoundState -> RoundOutput)
+  run_rounds       — R rounds as one lax.scan: on-device cohort sampling,
+                     device-resident (N, ...) client store, device data
+                     gathers (the scanned engine, DESIGN.md §10)
   federated_round  — back-compat tuple shim over run_round (Algorithm 1/2)
   client_update    — one client's K corrected local steps
-  FederatedTrainer — host controller (sampling + stateful-client stores)
+  FederatedTrainer — host controller (sampling + stateful-client stores;
+                     sync / pipelined / scanned execution modes)
 
 Extensibility (DESIGN.md §9):
   Algorithm / register_algorithm            — per-round algorithm strategy
@@ -25,6 +29,7 @@ from repro.core.api import (  # noqa: F401
     register_algorithm,
     register_server_optimizer,
     resolve_server_optimizer,
+    run_rounds,
     server_optimizer_names,
 )
 from repro.core.controller import (  # noqa: F401
@@ -38,4 +43,8 @@ from repro.core.rounds import (  # noqa: F401
     federated_round,
     run_round,
 )
-from repro.core.sampling import ClientSampler  # noqa: F401
+from repro.core.sampling import (  # noqa: F401
+    ClientSampler,
+    DeviceClientSampler,
+    device_sample_ids,
+)

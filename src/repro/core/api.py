@@ -388,3 +388,79 @@ def init_server_state(spec, x) -> ServerState:
     resolved server optimizer's initial slots."""
     opt = get_server_optimizer(resolve_server_optimizer(spec))
     return ServerState(x=x, c=tree_zeros_like(x), opt_state=opt.init(spec, x))
+
+
+# ---------------------------------------------------------------------------
+# the scanned multi-round engine (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
+               data, batch_fn, sample_key, data_key, start_round=0,
+               sizes=None, use_fused_update: bool = False, shard_fn=None):
+    """R communication rounds as one ``lax.scan`` — zero host round trips.
+
+    The host loop pays per-round dispatch (numpy cohort sampling, host
+    gather/scatter of the c_i store, a fresh ``jit`` call, host data
+    loading); at paper scale (thousands of rounds, Fig. 3 / Tables 3–5)
+    that dominates wall-clock. Here the whole round sequence is one
+    device program: cohort sampling is a ``jax.random`` permutation, the
+    *full* N-client control-variate store stays resident on device with
+    dynamic gather/scatter inside the scan body, and data loading is a
+    gather through the dataset's device-batch function.
+
+    server:       ``ServerState`` at round ``start_round``.
+    client_store: full client-state store, leaves ``(N, ...)`` (shard its
+                  leading axis over "data" via
+                  ``dist.partition_client_store`` on a multi-device mesh).
+    R:            trip count (python int — static under jit).
+    data:         dataset device arrays (``dataset.device_data()``).
+    batch_fn:     pure ``(data, ids, key) -> batches`` with leaves
+                  ``(S, K, b, ...)`` (``dataset.device_batch_fn(K, b)``).
+    sample_key:   base key of the cohort stream; round ``t`` draws
+                  ``device_sample_ids(sample_key, t, N, S)``.
+    data_key:     base key of the data stream; round ``t`` uses
+                  ``fold_in(data_key, t)``.
+    start_round:  absolute index of the first round (int or traced scalar
+                  — traced keeps one compilation across resume chunks).
+    sizes:        optional ``(N,)`` per-client dataset sizes for
+                  ``spec.weighted_aggregation``.
+
+    RNG contract: both streams are *stateless* functions of (base key,
+    absolute round index), so a host loop calling ``run_round`` once per
+    round with the same keys — or this scan re-entered at any chunk
+    boundary after a checkpoint restore — consumes identical randomness
+    and produces bit-for-bit identical trajectories
+    (tests/test_scan_engine.py).
+
+    Returns ``(server, client_store, metrics)`` with metrics leaves
+    stacked ``(R,)``.
+    """
+    # lazy imports: rounds.py imports this module at top level
+    from repro.core.rounds import run_round
+    from repro.core.sampling import device_sample_ids
+    from repro.core.tree import tree_gather, tree_scatter
+
+    assert not spec.compress_uplink, (
+        "uplink error-feedback residuals live in a host store; the "
+        "controller falls back to the host loop for compress_uplink")
+
+    def body(carry, t):
+        server, store = carry
+        ids = device_sample_ids(sample_key, t, spec.num_clients,
+                                spec.num_sampled)
+        batches = batch_fn(data, ids, jax.random.fold_in(data_key, t))
+        clients = ClientRoundState(
+            c_i=tree_gather(store, ids),
+            weights=(sizes[ids].astype(jnp.float32)
+                     if sizes is not None else None),
+        )
+        out = run_round(grad_fn, spec, server, clients, batches,
+                        use_fused_update=use_fused_update, shard_fn=shard_fn)
+        store = tree_scatter(store, ids, out.clients.c_i)
+        return (out.server, store), out.metrics
+
+    ts = jnp.arange(R, dtype=jnp.int32) + jnp.asarray(start_round, jnp.int32)
+    (server, client_store), metrics = jax.lax.scan(
+        body, (server, client_store), ts)
+    return server, client_store, metrics

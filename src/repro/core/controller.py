@@ -14,18 +14,35 @@ algorithm behaviour and the server step come from the registries in
 ``core/api.py`` (DESIGN.md §9), so the controller never branches on
 algorithm names.
 
-Execution is either synchronous (``pipeline_depth=0``, the seed
-behaviour) or pipelined (``pipeline_depth>=1``, DESIGN.md §8): the round
-function is dispatched asynchronously, the host prepares the next rounds'
-inputs (client sampling, c_i/residual gathers, ``dataset.round_batches``)
-while the device computes, and the host-store scatters are deferred until
-the round's outputs are actually consumed. Prefetched gathers that a
-later scatter would invalidate are re-gathered row-wise, so the pipelined
-trajectory is bit-for-bit identical to the synchronous one.
+Execution is one of three modes:
+
+  synchronous  ``pipeline_depth=0`` (the seed behaviour): sample, gather,
+               load, execute, scatter — strictly in order.
+  pipelined    ``pipeline_depth>=1`` (DESIGN.md §8): the round function
+               is dispatched asynchronously, the host prepares the next
+               rounds' inputs (client sampling, c_i/residual gathers,
+               ``dataset.round_batches``) while the device computes, and
+               the host-store scatters are deferred until the round's
+               outputs are actually consumed. Prefetched gathers that a
+               later scatter would invalidate are re-gathered row-wise,
+               so the pipelined trajectory is bit-for-bit identical to
+               the synchronous one.
+  scanned      ``scan_rounds=R>0`` (DESIGN.md §10): the round loop itself
+               moves on device — ``core/api.run_rounds`` ``lax.scan``s
+               the typed round over chunks of up to R rounds with
+               on-device cohort sampling, a device-resident (N, ...)
+               client store, and the dataset's device-batch gather. The
+               host only touches the trainer at chunk boundaries
+               (metrics, checkpoints). Requires the dataset's
+               device-data protocol; configs that can't scan fall back
+               to the host loop with a warning
+               (``scan_fallback_reason``). ``pipeline_depth`` is ignored
+               while scanning (there is no host work left to overlap).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
@@ -37,9 +54,15 @@ from repro.core.api import (
     ClientRoundState,
     get_algorithm,
     init_server_state,
+    run_rounds,
 )
 from repro.core.rounds import run_round
-from repro.core.sampling import ClientSampler
+from repro.core.sampling import (
+    ClientSampler,
+    DeviceClientSampler,
+    key_from_state,
+    key_state,
+)
 from repro.core.tree import tree_cast
 
 
@@ -115,12 +138,17 @@ class FederatedTrainer:
     ``pipeline_depth=d>=1`` keeps up to d rounds of host-side inputs
     prefetched while the device executes, overlapping data loading and
     state gathers with compute; trajectories are identical.
+    ``scan_rounds=R>0`` moves the loop on device in chunks of up to R
+    rounds (``run_rounds`` — requires the dataset's device-data protocol:
+    ``device_data()`` + ``device_batch_fn(K, b)``); incompatible configs
+    fall back to the host loop and record why in ``scan_fallback_reason``.
     """
 
     def __init__(self, loss_fn, init_params, spec, dataset, *, seed: int = 0,
                  use_fused_update: bool = False, donate: bool = True,
-                 pipeline_depth: int = 0):
+                 pipeline_depth: int = 0, scan_rounds: int = 0):
         assert pipeline_depth >= 0, pipeline_depth
+        assert scan_rounds >= 0, scan_rounds
         self.spec = spec
         self.dataset = dataset
         self.algorithm = get_algorithm(spec.algorithm)
@@ -151,6 +179,74 @@ class FederatedTrainer:
         self.history = []
         self.pipeline_depth = int(pipeline_depth)
         self._prefetch: deque = deque()
+
+        # -- scanned-engine mode (DESIGN.md §10) -------------------------
+        self.scan_rounds = int(scan_rounds)
+        self.scan_fallback_reason: Optional[str] = None
+        self._scan_mode = False
+        if self.scan_rounds > 0:
+            self.scan_fallback_reason = self._scan_incompatibility()
+            if self.scan_fallback_reason is not None:
+                warnings.warn(
+                    f"scan_rounds={scan_rounds} requested but running the "
+                    f"host loop: {self.scan_fallback_reason}", stacklevel=2)
+        if self.scan_rounds > 0 and self.scan_fallback_reason is None:
+            self._scan_mode = True
+            # device RNG streams mirror the host pair (sampler=seed,
+            # data=seed+1) but are stateless in the round index — see
+            # sampling.device_sample_ids / DESIGN.md §10
+            self.device_sampler = DeviceClientSampler(
+                spec.num_clients, spec.num_sampled, seed)
+            self._data_base_key = jax.random.key(seed + 1)
+            self._device_data = dataset.device_data()
+            self._device_batch_fn = dataset.device_batch_fn(
+                spec.local_steps, spec.local_batch)
+            self._device_sizes = (
+                jnp.asarray(dataset.device_client_sizes())
+                if spec.weighted_aggregation else None)
+            # full (N, ...) control-variate store, device-resident between
+            # chunks; the host self.store is a lazily-synced mirror that
+            # only checkpointing reads
+            self.device_store = jax.tree.map(
+                lambda a: jnp.zeros((spec.num_clients,) + a.shape,
+                                    jnp.asarray(a).dtype),
+                self.server.x)
+            self._host_store_dirty = False
+            batch_fn = self._device_batch_fn
+
+            def chunk_fn(server, store, data, sample_key, data_key, sizes,
+                         t0, R):
+                return run_rounds(
+                    grad_fn, spec, server, store, R, data=data,
+                    batch_fn=batch_fn, sample_key=sample_key,
+                    data_key=data_key, start_round=t0, sizes=sizes,
+                    use_fused_update=use_fused_update)
+
+            # R is static (one compile per distinct chunk length); t0 is
+            # traced so resume chunks reuse the compilation
+            self._scan_fn = jax.jit(
+                chunk_fn, static_argnums=(7,),
+                donate_argnums=(0, 1) if donate else ())
+
+    @property
+    def scan_active(self) -> bool:
+        """True when rounds execute through the scanned engine."""
+        return self._scan_mode
+
+    def _scan_incompatibility(self) -> Optional[str]:
+        """Why this config can't run the scanned engine (None = it can)."""
+        d = self.dataset
+        if not (hasattr(d, "device_data") and hasattr(d, "device_batch_fn")):
+            return (f"dataset {type(d).__name__} has no device-data protocol "
+                    f"(device_data()/device_batch_fn(K, b))")
+        if self.spec.compress_uplink:
+            return ("uplink error-feedback residuals live in a host store; "
+                    "compression stays on the host loop")
+        if (self.spec.weighted_aggregation
+                and not hasattr(d, "device_client_sizes")):
+            return ("weighted_aggregation needs "
+                    f"{type(d).__name__}.device_client_sizes()")
+        return None
 
     # ------------------------------------------------------------------
     # back-compat views of the typed server state
@@ -189,16 +285,25 @@ class FederatedTrainer:
     def host_rng_state(self) -> Dict[str, Any]:
         """Sampler + data-RNG states as of the *next unprepared* round —
         i.e. rewound past any prefetched inputs, so a restore re-prepares
-        them identically (checkpoint/checkpoint.py)."""
+        them identically (checkpoint/checkpoint.py). In scan mode the
+        device streams are stateless in the round index, so only their
+        base keys ride along (the round counter is checkpointed anyway)."""
         if self._prefetch:
             return self._prefetch[0].host_state
-        return {"sampler": self.sampler.get_state(),
-                "data_rng": self._rng.bit_generator.state}
+        state = {"sampler": self.sampler.get_state(),
+                 "data_rng": self._rng.bit_generator.state}
+        if self._scan_mode:
+            state["device_sampler"] = self.device_sampler.get_state()
+            state["device_data_key"] = key_state(self._data_base_key)
+        return state
 
     def set_host_rng_state(self, state: Dict[str, Any]) -> None:
         self._prefetch.clear()
         self.sampler.set_state(state["sampler"])
         self._rng.bit_generator.state = state["data_rng"]
+        if self._scan_mode and "device_sampler" in state:
+            self.device_sampler.set_state(state["device_sampler"])
+            self._data_base_key = key_from_state(state["device_data_key"])
 
     def _prepare_inputs(self) -> _RoundInputs:
         """Sample → gather → load, in the exact host-RNG order of the
@@ -248,10 +353,56 @@ class FederatedTrainer:
         return out.clients, out.metrics
 
     # ------------------------------------------------------------------
+    # scanned engine (DESIGN.md §10): device store residency + chunks
+    # ------------------------------------------------------------------
+
+    def sync_host_store(self) -> None:
+        """Mirror the device-resident client store into the host store.
+        Checkpointing reads the host store; no-op outside scan mode or
+        when the mirror is current."""
+        if self._scan_mode and self._host_store_dirty:
+            self.store.scatter(np.arange(self.spec.num_clients),
+                               jax.tree.map(np.asarray, self.device_store))
+            self._host_store_dirty = False
+
+    def push_host_store_to_device(self) -> None:
+        """Reload the device store from the host store after a checkpoint
+        restore scattered into it (checkpoint.load_trainer)."""
+        if self._scan_mode:
+            self.device_store = jax.tree.map(
+                jnp.asarray,
+                self.store.gather(np.arange(self.spec.num_clients)))
+            self._host_store_dirty = False
+
+    def _run_scan_chunk(self, R: int):
+        """Execute R rounds as one on-device scan; returns the R per-round
+        metric dicts (also appended to ``history``)."""
+        server, store, metrics = self._scan_fn(
+            self.server, self.device_store, self._device_data,
+            self.device_sampler.key, self._data_base_key,
+            self._device_sizes, self.round_idx, R)
+        self.server, self.device_store = server, store
+        self._host_store_dirty = True
+        stacked = {k: np.asarray(v) for k, v in metrics.items()}
+        out = []
+        for r in range(R):
+            self.round_idx += 1
+            m = {k: float(v[r]) for k, v in stacked.items()}
+            m["round"] = self.round_idx
+            self.history.append(m)
+            out.append(m)
+        return out
+
+    # ------------------------------------------------------------------
     # round loop
     # ------------------------------------------------------------------
 
     def run_round(self) -> Dict[str, float]:
+        if self._scan_mode:
+            # chunk of one — bit-for-bit the same trajectory as a larger
+            # chunk (tests/test_scan_engine.py), so per-round driving and
+            # run()'s chunking compose freely
+            return self._run_scan_chunk(1)[0]
         if self.pipeline_depth > 0:
             inp = (self._prefetch.popleft() if self._prefetch
                    else self._prepare_inputs())
@@ -283,7 +434,29 @@ class FederatedTrainer:
             eval_every: int = 0, target_metric: Optional[float] = None,
             metric_name: str = "accuracy", verbose: bool = False):
         """Run rounds; if target_metric given, stop early once
-        eval_fn(x)[metric_name] >= target and return rounds used."""
+        eval_fn(x)[metric_name] >= target and return rounds used.
+
+        In scan mode the rounds execute in on-device chunks of up to
+        ``scan_rounds``, with chunk ends aligned to ``eval_every`` so the
+        eval/early-stop schedule matches the host loop exactly."""
+        if self._scan_mode:
+            done = 0
+            while done < rounds:
+                chunk = min(self.scan_rounds, rounds - done)
+                if eval_fn is not None and eval_every:
+                    chunk = min(chunk, eval_every - done % eval_every)
+                m = self._run_scan_chunk(chunk)[-1]
+                done += chunk
+                if (eval_fn is not None and eval_every
+                        and done % eval_every == 0):
+                    em = eval_fn(self.x)
+                    m.update(em)
+                    if verbose:
+                        print(f"round {done}: {m}")
+                    if (target_metric is not None
+                            and em[metric_name] >= target_metric):
+                        return done
+            return rounds
         for r in range(rounds):
             m = self.run_round()
             if eval_fn is not None and eval_every and (r + 1) % eval_every == 0:

@@ -1,8 +1,31 @@
-"""Client sampling: uniform without replacement (paper §2)."""
+"""Client sampling: uniform without replacement (paper §2).
+
+Two samplers with the same distribution but different substrates:
+
+``ClientSampler``
+    The seed's host sampler (numpy ``Generator.choice``). Stateful: each
+    ``sample()`` advances the generator, and checkpoints record the raw
+    bit-generator state.
+
+``DeviceClientSampler``
+    The scanned engine's sampler (DESIGN.md §10). Round ``t``'s cohort is
+
+        jax.random.permutation(fold_in(key, t), N)[:S]
+
+    — a *stateless* function of the base key and the absolute round
+    index, so any driver of the stream (one big ``lax.scan``, several
+    resume chunks, or a per-round loop calling ``device_sample_ids``
+    with the same key) consumes identical randomness without carried
+    RNG state: checkpoints only need the base key and the round
+    counter. Note the *fallback* host loop keeps the numpy
+    ``ClientSampler`` stream — a config that can't scan runs the seed
+    trajectory, not the device one.
+"""
 from __future__ import annotations
 
 from typing import Any, Dict
 
+import jax
 import numpy as np
 
 
@@ -23,3 +46,46 @@ class ClientSampler:
 
     def set_state(self, state: Dict[str, Any]) -> None:
         self._rng.bit_generator.state = state
+
+
+def key_state(key) -> Dict[str, Any]:
+    """JSON-serializable state of a typed jax PRNG key (checkpointing)."""
+    return {"impl": str(jax.random.key_impl(key)),
+            "key_data": np.asarray(jax.random.key_data(key)).tolist()}
+
+
+def key_from_state(state: Dict[str, Any]):
+    return jax.random.wrap_key_data(
+        np.asarray(state["key_data"], np.uint32), impl=state["impl"])
+
+
+def device_sample_ids(key, t, num_clients: int, num_sampled: int):
+    """Round ``t``'s cohort (S,) int32, uniform without replacement.
+
+    Pure/jittable; ``t`` may be a traced scalar (the scan induction
+    variable) — the fold_in makes every round's draw independent while
+    keeping the stream a pure function of (key, t).
+    """
+    perm = jax.random.permutation(jax.random.fold_in(key, t), num_clients)
+    return perm[:num_sampled].astype(np.int32)
+
+
+class DeviceClientSampler:
+    """Host-side handle on the device sampling stream: owns the base key
+    the scanned engine folds per round (``device_sample_ids(self.key, t,
+    N, S)`` inside ``lax.scan``) and its checkpoint serialization.
+    """
+
+    def __init__(self, num_clients: int, num_sampled: int, seed: int = 0):
+        self.num_clients = num_clients
+        self.num_sampled = num_sampled
+        self.key = jax.random.key(seed)
+
+    # the stream is stateless in t; checkpoints persist the raw key data
+    # so a resumed trainer samples the same cohorts even if reconstructed
+    # with a different seed argument
+    def get_state(self) -> Dict[str, Any]:
+        return key_state(self.key)
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self.key = key_from_state(state)

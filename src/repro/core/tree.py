@@ -57,3 +57,21 @@ def tree_index(tree, i):
 def tree_mean_leading(tree):
     """Mean over the leading (client) axis of every leaf."""
     return jax.tree.map(lambda x: x.mean(axis=0), tree)
+
+
+def tree_gather(store, ids):
+    """Rows ``ids`` of a stacked store: (N, ...) leaves -> (S, ...) leaves.
+
+    Pure/jittable — inside the scanned engine this is the device-resident
+    replacement for ``ClientStateStore.gather`` (DESIGN.md §10)."""
+    return jax.tree.map(lambda leaf: leaf[ids], store)
+
+
+def tree_scatter(store, ids, new):
+    """Write (S, ...) leaves back into rows ``ids`` of a (N, ...) store.
+
+    Pure/jittable counterpart of ``ClientStateStore.scatter``; under jit
+    with donated store buffers this lowers to an in-place dynamic
+    update-slice rather than a copy."""
+    return jax.tree.map(lambda leaf, n: leaf.at[ids].set(n.astype(leaf.dtype)),
+                        store, new)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -87,6 +88,42 @@ class EmnistLikeFederated:
     def client_sizes(self, ids: np.ndarray) -> np.ndarray:
         """Per-client dataset sizes (paper §2 weighted aggregation)."""
         return np.asarray([len(self.shards[i]) for i in ids], np.int64)
+
+    # -- device-data protocol (scanned engine, DESIGN.md §10) ------------
+    # The whole pool + a padded (N, max_shard) shard-index table lives on
+    # device; a round's batches become two chained gathers (shard row →
+    # pool row) driven by uniform draws from the round's data key, so no
+    # host callback enters the scan.
+
+    def device_data(self) -> Dict:
+        lens = np.asarray([len(s) for s in self.shards], np.int32)
+        max_len = int(lens.max())
+        idx = np.stack([np.resize(s, max_len) for s in self.shards])
+        return {
+            "x": jnp.asarray(self.x),
+            "y": jnp.asarray(self.y),
+            "shard_idx": jnp.asarray(idx.astype(np.int32)),
+            "shard_len": jnp.asarray(lens),
+        }
+
+    def device_batch_fn(self, K: int, b: int):
+        def batch_fn(data, ids, key):
+            s = ids.shape[0]
+            # uniform-with-replacement positions in [0, len_i) per client
+            # (the host path samples without replacement when the shard is
+            # large enough — a different, equally-uniform stream; the
+            # scanned/host-fallback equivalence both use *this* one)
+            u = jax.random.uniform(key, (s, K, b))
+            lens = data["shard_len"][ids]
+            pos = jnp.floor(u * lens[:, None, None].astype(jnp.float32))
+            pos = jnp.minimum(pos.astype(jnp.int32), lens[:, None, None] - 1)
+            take = data["shard_idx"][ids[:, None, None], pos]
+            return {"x": data["x"][take], "y": data["y"][take]}
+
+        return batch_fn
+
+    def device_client_sizes(self):
+        return jnp.asarray([len(s) for s in self.shards], jnp.float32)
 
     def local_batch_size(self, batch_frac: float = 0.2) -> int:
         sizes = [len(s) for s in self.shards]

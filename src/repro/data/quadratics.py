@@ -65,6 +65,31 @@ class QuadraticDataset:
         so weighted aggregation degenerates to the unweighted mean."""
         return np.ones(len(ids), np.int64)
 
+    # -- device-data protocol (scanned engine, DESIGN.md §10) ------------
+    # σ=0 quadratics are fully deterministic: the device batch is a pure
+    # gather of (A_i, b_i) broadcast over (K, b) — the data key is unused.
+
+    def device_data(self) -> Dict:
+        return {"A": jnp.asarray(self.A), "b": jnp.asarray(self.b)}
+
+    def device_batch_fn(self, K: int, b: int):
+        d = self.dim
+
+        def batch_fn(data, ids, key):
+            del key  # full-batch clients: no stochastic data draw
+            s = ids.shape[0]
+            return {
+                "A": jnp.broadcast_to(
+                    data["A"][ids][:, None, None], (s, K, b, d, d)),
+                "b": jnp.broadcast_to(
+                    data["b"][ids][:, None, None], (s, K, b, d)),
+            }
+
+        return batch_fn
+
+    def device_client_sizes(self):
+        return jnp.ones((self.num_clients,), jnp.float32)
+
     def f(self, x) -> float:
         x = np.asarray(x)
         return float(0.5 * x @ self.A.mean(0) @ x + self.b.mean(0) @ x)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from typing import Dict
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -60,6 +61,55 @@ class SyntheticLMFederated:
         """Vocabulary-slab sizes stand in for dataset sizes (the stream is
         infinite); ``array_split`` makes them unequal when V % N != 0."""
         return np.asarray([len(self.slices[i]) for i in ids], np.int64)
+
+    # -- device-data protocol (scanned engine, DESIGN.md §10) ------------
+    # The unigram mixture resamples on device: the zipf background becomes
+    # a categorical over log-probs, the client-private slab a uniform draw
+    # inside [slab_start_i, slab_start_i + slab_len_i), and the
+    # learnable every-other-token structure is the same vectorised
+    # prev+shift rewrite as the host path — no host callback in the scan.
+
+    def device_data(self) -> Dict:
+        return {
+            "log_bg": jnp.log(jnp.asarray(self.background, jnp.float32)),
+            "slab_start": jnp.asarray(
+                [s[0] for s in self.slices], jnp.int32),
+            "slab_len": jnp.asarray(
+                [len(s) for s in self.slices], jnp.int32),
+            "shifts": jnp.asarray(self.shifts, jnp.int32),
+        }
+
+    def device_batch_fn(self, K: int, b: int):
+        L = self.seq_len + 1
+        het = self.heterogeneity
+        V = self.vocab_size
+
+        def batch_fn(data, ids, key):
+            s = ids.shape[0]
+            k_mix, k_priv, k_bg = jax.random.split(key, 3)
+            shape = (s, K, b, L)
+            use_private = jax.random.uniform(k_mix, shape) < het
+            slab_len = data["slab_len"][ids][:, None, None, None]
+            u = jax.random.uniform(k_priv, shape)
+            off = jnp.minimum(
+                jnp.floor(u * slab_len.astype(jnp.float32)).astype(jnp.int32),
+                slab_len - 1)
+            private = data["slab_start"][ids][:, None, None, None] + off
+            shared = jax.random.categorical(
+                k_bg, data["log_bg"], shape=shape).astype(jnp.int32)
+            toks = jnp.where(use_private, private, shared)
+            # inject learnable structure: every other token repeats
+            # prev+shift (mirrors _client_sample)
+            n_odd = toks[..., 1::2].shape[-1]
+            shift = data["shifts"][ids][:, None, None, None]
+            toks = toks.at[..., 1::2].set(
+                (toks[..., 0::2][..., :n_odd] + shift) % V)
+            return {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+
+        return batch_fn
+
+    def device_client_sizes(self):
+        return jnp.asarray([len(s) for s in self.slices], jnp.float32)
 
     def eval_batch(self, batch_size: int, rng) -> Dict:
         """I.i.d. mixture batch for global-model eval."""

@@ -74,6 +74,18 @@ def partition_client_states(shapes, mesh, strategy, *,
         mesh)
 
 
+def partition_client_store(shapes, mesh, strategy):
+    """The scanned engine's full device-resident client store, leaves
+    (N, ...): the *all-clients* axis shards over "data" whenever the axis
+    size divides N (DESIGN.md §10). The per-round gather of the S sampled
+    rows then lands them on the same data groups that execute the round's
+    vmap, and the scatter goes back shard-local — no store leaf is ever
+    replicated across data groups between rounds."""
+    return _to_sharding(
+        _spec_tree(shapes, mesh, strategy, lead_dims=1, lead_axis="data"),
+        mesh)
+
+
 def partition_train_batch(shapes, mesh, strategy):
     """Round batches, leaves (S, K, b, ...): client axis over "data" under
     client_parallel; under client_sequential S is scanned on-host order so

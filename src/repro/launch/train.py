@@ -60,6 +60,10 @@ def main(argv=None):
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
     ap.add_argument("--pipeline-depth", type=int, default=0)
+    ap.add_argument("--scan-rounds", type=int, default=0,
+                    help="scanned-engine chunk size: run rounds on device "
+                         "in lax.scan chunks of up to this many (0 = host "
+                         "loop; DESIGN.md §10)")
     ap.add_argument("--resume", default="",
                     help="checkpoint to restore before training")
     ap.add_argument("--rounds", type=int, default=50)
@@ -100,7 +104,11 @@ def main(argv=None):
     trainer = FederatedTrainer(
         partial(M.loss_fn, cfg), partial(M.init_params, cfg), spec, data,
         seed=args.seed, pipeline_depth=args.pipeline_depth,
+        scan_rounds=args.scan_rounds,
     )
+    if trainer.scan_active:
+        print(f"scanned engine: on-device chunks of <= {args.scan_rounds} "
+              f"rounds")
     if args.resume:
         load_trainer(args.resume, trainer)
         print(f"resumed from {args.resume} at round {trainer.round_idx}")
@@ -108,12 +116,19 @@ def main(argv=None):
     eval_rng = np.random.default_rng(args.seed + 7)
     eval_batch = data.eval_batch(8, eval_rng)
     eval_loss = jax.jit(lambda p, b: M.loss_fn(cfg, p, b)[0])
-    for r in range(args.rounds):
-        m = trainer.run_round()
-        if (r + 1) % args.log_every == 0 or r == 0:
-            ev = float(eval_loss(trainer.x, eval_batch))
-            print(f"round {r+1:4d} loss={m['loss']:.4f} eval={ev:.4f} "
-                  f"drift={m['drift']:.3e} ({time.time()-t0:.1f}s)")
+    # log after round 1, then at every log_every boundary; between logs the
+    # scanned engine runs whole chunks, the host loop runs single rounds
+    done = 0
+    while done < args.rounds:
+        target = (1 if done == 0 else
+                  min(args.rounds, (done // args.log_every + 1)
+                      * args.log_every))
+        trainer.run(target - done)
+        done = target
+        m = trainer.history[-1]
+        ev = float(eval_loss(trainer.x, eval_batch))
+        print(f"round {done:4d} loss={m['loss']:.4f} eval={ev:.4f} "
+              f"drift={m['drift']:.3e} ({time.time()-t0:.1f}s)")
     if args.checkpoint:
         save_trainer(args.checkpoint, trainer)
         print("checkpoint saved to", args.checkpoint)

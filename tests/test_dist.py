@@ -146,3 +146,42 @@ def test_debug_mesh_round_runs_sharded():
                      in_shardings=(x_sh, x_sh, None, None))
         x2, c2, ci2, metrics = fn(params, c, ci, batch)
         assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_scanned_engine_runs_with_sharded_store():
+    """run_rounds executes under a real (1x1) mesh with the full (N, ...)
+    client store sharded by dist.partition_client_store — the wiring the
+    scanned engine uses to keep store rows on the data groups that run
+    the round's client vmap (DESIGN.md §10)."""
+    from jax.sharding import NamedSharding
+
+    from repro.configs.base import FedRoundSpec
+    from repro.core import init_server_state, make_grad_fn, run_rounds
+    from repro.data import make_similarity_quadratics, quadratic_loss
+    from repro.dist import partition_client_store
+    from repro.launch.mesh import make_debug_mesh
+
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=8, num_sampled=2,
+                        local_steps=2, local_batch=1, eta_l=0.05)
+    ds = make_similarity_quadratics(8, 4, delta=0.3, G=4.0, mu=0.3, seed=0)
+    mesh = make_debug_mesh(1, 1)
+    with mesh:
+        server = init_server_state(spec, {"x": jnp.ones((4,), jnp.float32)})
+        store = {"x": jnp.zeros((8, 4), jnp.float32)}
+        store_sh = partition_client_store(
+            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         store),
+            mesh, spec.strategy)
+        assert all(isinstance(s, NamedSharding)
+                   for s in jax.tree.leaves(
+                       store_sh, is_leaf=lambda x: isinstance(x,
+                                                             NamedSharding)))
+        store = jax.device_put(store, store_sh)
+        grad_fn = make_grad_fn(quadratic_loss)
+        _, store2, metrics = run_rounds(
+            grad_fn, spec, server, store, 3, data=ds.device_data(),
+            batch_fn=ds.device_batch_fn(2, 1),
+            sample_key=jax.random.key(0), data_key=jax.random.key(1))
+        assert metrics["loss"].shape == (3,)
+        assert bool(jnp.isfinite(metrics["loss"]).all())
+        assert store2["x"].shape == (8, 4)

@@ -1,0 +1,325 @@
+"""Scanned-engine equivalence suite (DESIGN.md §10 acceptance).
+
+``run_rounds(R)`` — the on-device ``lax.scan`` over the typed round with
+device cohort sampling, a device-resident (N, ...) client store and
+device data gathers — must be **bit-for-bit identical** to R iterations
+of the host loop (separately-jitted ``run_round`` calls over the same
+device RNG contract) across
+
+    {scaffold, fedavg, fedprox, scaffold_m}
+        x {sgd, momentum, adam server optimizers}
+        x {fused update on/off}
+
+plus chunk-size invariance (one scan of R == any chunking of R) and
+bitwise checkpoint-resume when the restore round lands mid-chunk
+relative to the original chunking.
+"""
+import contextlib
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_trainer, save_trainer
+from repro.configs.base import FedRoundSpec
+from repro.core import (
+    ClientRoundState,
+    FederatedTrainer,
+    device_sample_ids,
+    init_server_state,
+    make_grad_fn,
+    run_round,
+    run_rounds,
+)
+from repro.data import (
+    EmnistLikeFederated,
+    SyntheticLMFederated,
+    make_similarity_quadratics,
+    quadratic_loss,
+)
+from repro.kernels.scaffold_update import ops as fused_ops
+from repro.models.simple import logreg_init, logreg_loss
+
+GRAD_FN = make_grad_fn(quadratic_loss)
+
+N, S, K, DIM = 10, 3, 4, 6
+ROUNDS = 3
+
+
+def _spec(algo, server_opt, **kw):
+    return FedRoundSpec(
+        algorithm=algo, num_clients=N, num_sampled=S, local_steps=K,
+        local_batch=1, eta_l=0.05, eta_g=0.7, server_optimizer=server_opt,
+        server_momentum=0.8 if server_opt == "momentum" else 0.0, **kw)
+
+
+def _init_params(key):
+    return {"x": jnp.ones((DIM,), jnp.float32)}
+
+
+def _dataset():
+    return make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, mu=0.3,
+                                      seed=1)
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
+    """R iterations of the host loop on the scanned engine's RNG contract:
+    per-round separately-jitted run_round, numpy store gather/scatter,
+    cohorts/data drawn from the same fold_in(key, t) streams."""
+    grad_fn = make_grad_fn(quadratic_loss)
+    data = ds.device_data()
+    bf = jax.jit(ds.device_batch_fn(spec.local_steps, spec.local_batch))
+    skey, dkey = jax.random.key(seed), jax.random.key(seed + 1)
+    samp = jax.jit(partial(device_sample_ids, num_clients=spec.num_clients,
+                           num_sampled=spec.num_sampled))
+    rj = jax.jit(lambda s, c, b: run_round(
+        grad_fn, spec, s, c, b, use_fused_update=use_fused_update))
+    server = init_server_state(spec, _init_params(None))
+    store = np.zeros((spec.num_clients, DIM), np.float32)
+    hist = []
+    for t in range(rounds):
+        ids = np.asarray(samp(skey, t))
+        batches = bf(data, jnp.asarray(ids), jax.random.fold_in(dkey, t))
+        clients = ClientRoundState(c_i={"x": jnp.asarray(store[ids])})
+        out = rj(server, clients, batches)
+        server = out.server
+        store[ids] = np.asarray(out.clients.c_i["x"])
+        hist.append({k: float(v) for k, v in out.metrics.items()})
+    return server, store, hist
+
+
+@pytest.mark.parametrize("use_fused", [False, True],
+                         ids=["plain", "fused"])
+@pytest.mark.parametrize("server_opt", ["sgd", "momentum", "adam"])
+@pytest.mark.parametrize("algo",
+                         ["scaffold", "fedavg", "fedprox", "scaffold_m"])
+def test_scanned_matches_host_loop(algo, server_opt, use_fused):
+    """Full matrix: one scanned chunk of R rounds == R host-loop rounds,
+    bitwise, for server model/control/optimizer slots, the whole client
+    store, and the per-round metrics."""
+    spec = _spec(algo, server_opt)
+    ds = _dataset()
+    ctx = (fused_ops.force_interpret() if use_fused
+           else contextlib.nullcontext())
+    with ctx:
+        server_h, store_h, hist_h = _host_loop_device_rng(
+            spec, ds, ROUNDS, use_fused_update=use_fused)
+        tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                              scan_rounds=ROUNDS, use_fused_update=use_fused)
+        assert tr.scan_active, tr.scan_fallback_reason
+        tr.run(ROUNDS)
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal(server_h.c, tr.c)
+    _assert_tree_equal(server_h.opt_state, tr.server.opt_state)
+    _assert_tree_equal({"x": store_h}, tr.device_store)
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+@pytest.mark.parametrize("chunks", [(1, 1, 1, 1, 1, 1), (2, 4), (6,),
+                                    (4, 2), (3, 3)])
+def test_chunk_size_invariance(chunks):
+    """Any chunking of 6 rounds produces the same bits — per-round driving
+    (run_round == chunk of 1) and big scans interchange freely."""
+    spec = _spec("scaffold", "momentum")
+    ds = _dataset()
+    ref = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                           scan_rounds=6)
+    ref.run(6)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=max(chunks))
+    for c in chunks:
+        tr._run_scan_chunk(c)
+    _assert_tree_equal(ref.x, tr.x)
+    _assert_tree_equal(ref.device_store, tr.device_store)
+    assert ref.history == tr.history
+
+
+def test_run_rounds_direct_api():
+    """The engine is callable standalone (no trainer): typed in, typed
+    out, stacked (R,) metrics."""
+    spec = _spec("scaffold", "sgd")
+    ds = _dataset()
+    server = init_server_state(spec, _init_params(None))
+    store = {"x": jnp.zeros((N, DIM), jnp.float32)}
+    server2, store2, metrics = run_rounds(
+        GRAD_FN, spec, server, store, 5,
+        data=ds.device_data(),
+        batch_fn=ds.device_batch_fn(K, 1),
+        sample_key=jax.random.key(0), data_key=jax.random.key(1))
+    assert metrics["loss"].shape == (5,)
+    assert store2["x"].shape == (N, DIM)
+    server_h, store_h, hist_h = _host_loop_device_rng(spec, ds, 5)
+    _assert_tree_equal(server_h.x, server2.x)
+    _assert_tree_equal({"x": store_h}, store2)
+    np.testing.assert_array_equal(
+        np.asarray(metrics["loss"]),
+        np.asarray([h["loss"] for h in hist_h], np.float32))
+
+
+def test_checkpoint_resume_mid_chunk(tmp_path):
+    """Checkpoint after 7 rounds (mid-chunk for scan_rounds=5: chunks run
+    5+2), restore into a fresh trainer, continue — bitwise equal to the
+    unbroken 12-round run."""
+    spec = _spec("scaffold", "adam")
+    ds = _dataset()
+    unbroken = FederatedTrainer(quadratic_loss, _init_params, spec, ds,
+                                seed=0, scan_rounds=5)
+    unbroken.run(12)
+    a = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=5)
+    a.run(7)
+    path = str(tmp_path / "ck.npz")
+    save_trainer(path, a)
+    b = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=5)
+    load_trainer(path, b)
+    assert b.round_idx == 7
+    b.run(5)
+    _assert_tree_equal(unbroken.x, b.x)
+    _assert_tree_equal(unbroken.c, b.c)
+    _assert_tree_equal(unbroken.server.opt_state, b.server.opt_state)
+    _assert_tree_equal(unbroken.device_store, b.device_store)
+
+
+def test_checkpoint_crosses_engines(tmp_path):
+    """A scan-mode checkpoint restores into a host-loop trainer (and back):
+    the stores ride the same host .npz keys in every execution mode."""
+    spec = _spec("scaffold", "sgd")
+    ds = _dataset()
+    a = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=4)
+    a.run(4)
+    path = str(tmp_path / "ck.npz")
+    save_trainer(path, a)
+    host = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0)
+    load_trainer(path, host)
+    _assert_tree_equal(a.x, host.x)
+    a.sync_host_store()
+    _assert_tree_equal(a.store.gather(np.arange(N)),
+                       host.store.gather(np.arange(N)))
+
+
+def test_fallback_to_host_loop_warns_and_matches():
+    """A dataset without the device-data protocol falls back to the host
+    loop (with a visible reason) and runs exactly the host trajectory."""
+    spec = _spec("scaffold", "sgd")
+    ds = _dataset()
+
+    class HostOnly:
+        num_clients = N
+
+        def round_batches(self, ids, K, b, rng):
+            return ds.round_batches(ids, K, b, rng)
+
+    with pytest.warns(UserWarning, match="device-data protocol"):
+        tr = FederatedTrainer(quadratic_loss, _init_params, spec, HostOnly(),
+                              seed=0, scan_rounds=4)
+    assert not tr.scan_active
+    assert "device-data protocol" in tr.scan_fallback_reason
+    ref = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0)
+    for _ in range(3):
+        tr.run_round()
+        ref.run_round()
+    _assert_tree_equal(ref.x, tr.x)
+
+
+def test_fallback_on_uplink_compression():
+    spec = _spec("scaffold", "sgd", compress_uplink=True)
+    with pytest.warns(UserWarning, match="host loop"):
+        tr = FederatedTrainer(quadratic_loss, _init_params, spec, _dataset(),
+                              seed=0, scan_rounds=4)
+    assert not tr.scan_active
+    tr.run_round()  # host loop still works
+
+
+def test_scanned_emnist_weighted_matches_chunking():
+    """EMNIST-like device path + weighted aggregation: chunk-invariant and
+    store-consistent (covers the padded shard-index gather)."""
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=8, num_sampled=3,
+                        local_steps=3, local_batch=4, eta_l=0.1,
+                        weighted_aggregation=True)
+    ds = EmnistLikeFederated(num_clients=8, samples=600, similarity_pct=10.0,
+                             seed=0, test_samples=50)
+    init = lambda k: logreg_init(k, 784, 62)
+    a = FederatedTrainer(logreg_loss, init, spec, ds, seed=0, scan_rounds=4)
+    assert a.scan_active, a.scan_fallback_reason
+    a.run(4)
+    b = FederatedTrainer(logreg_loss, init, spec, ds, seed=0, scan_rounds=2)
+    b.run(4)
+    _assert_tree_equal(a.x, b.x)
+    _assert_tree_equal(a.device_store, b.device_store)
+    assert a.history == b.history
+
+
+def test_scanned_synthetic_lm_matches_chunking():
+    """Synthetic-LM device path (categorical background + private slabs +
+    structure rewrite) is deterministic in the round index."""
+    spec = FedRoundSpec(algorithm="scaffold_m", num_clients=6, num_sampled=2,
+                        local_steps=2, local_batch=2, eta_l=0.05)
+    ds = SyntheticLMFederated(6, vocab_size=64, seq_len=12, seed=0)
+
+    # tiny one-hot "embedding" LM: differentiable and seconds-fast
+    def loss_oh(params, batch):
+        oh = jax.nn.one_hot(batch["tokens"], 64, dtype=jnp.float32)
+        logits = jnp.einsum("bLV,Vd->bLd", oh, params["w"])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, batch["labels"][..., None], -1)
+        l = -jnp.mean(ll)
+        return l, {"loss": l}
+
+    init_oh = lambda k: {"w": jnp.zeros((64, 64), jnp.float32)}
+    a = FederatedTrainer(loss_oh, init_oh, spec, ds, seed=0, scan_rounds=4)
+    assert a.scan_active, a.scan_fallback_reason
+    a.run(4)
+    b = FederatedTrainer(loss_oh, init_oh, spec, ds, seed=0, scan_rounds=1)
+    b.run(4)
+    _assert_tree_equal(a.x, b.x)
+    assert a.history == b.history
+
+
+def test_sgd_whole_batch_scans():
+    """The large-batch sgd baseline runs through the scan (its c_i rows
+    pass through the gather/scatter unchanged)."""
+    spec = FedRoundSpec(algorithm="sgd", num_clients=N, num_sampled=S,
+                        local_steps=K, local_batch=1, eta_l=0.05)
+    ds = _dataset()
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=3)
+    assert tr.scan_active
+    tr.run(3)
+    server_h, store_h, hist_h = _host_loop_device_rng(spec, ds, 3)
+    _assert_tree_equal(server_h.x, tr.x)
+    np.testing.assert_array_equal(store_h,
+                                  np.asarray(tr.device_store["x"]))
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+def test_run_aligns_chunks_to_eval_boundaries():
+    """run(eval_every=e) in scan mode evaluates on exactly the same
+    schedule as the host loop and early-stops at the same round."""
+    spec = _spec("scaffold", "sgd")
+    ds = _dataset()
+    evals = []
+
+    def eval_fn(params):
+        v = float(np.asarray(params["x"]).sum())
+        evals.append(v)
+        return {"accuracy": 1.0}  # always above target -> stop at round 2
+
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=64)
+    used = tr.run(10, eval_fn=eval_fn, eval_every=2, target_metric=0.5)
+    assert used == 2
+    assert len(evals) == 1
+    assert tr.round_idx == 2
