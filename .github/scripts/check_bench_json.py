@@ -24,6 +24,18 @@ def check(path: str) -> None:
             assert record["mode"] in ROUND_MODES, record
             assert record["rounds_per_s"] > 0, record
             assert "kernel_launches_per_step_packed" in record, record
+    if payload["bench"] == "compression":
+        codecs = {record["codec"] for record in records}
+        assert "none" in codecs, codecs  # the uncompressed baseline row
+        for record in records:
+            assert record["codec"], record
+            # acceptance: every codec rides the scanned engine
+            assert record["mode"] == "scanned", record
+            assert record["rounds_per_s"] > 0, record
+            assert record["bytes_up_per_round"] > 0, record
+            assert record["bytes_down_per_round"] > 0, record
+            # can legitimately dip below 1.0 (large --k on tiny leaves)
+            assert record["uplink_ratio"] > 0, record
     print(f"{path}: ok ({len(records)} records, bench={payload['bench']!r})")
 
 

@@ -1,0 +1,105 @@
+"""Compression sweep on the scanned engine (DESIGN.md §11).
+
+For every codec in the compressor registry, runs ``FederatedTrainer``
+with ``scan_rounds=R`` (the on-device ``lax.scan`` engine — asserting no
+``scan_fallback_reason``: residuals are device-store rows) on the
+dispatch-bound quadratics workload and reports
+
+  rounds/s               wall-clock of the scanned chunk,
+  bytes_up / bytes_down  the per-round communicated-bytes metrics the
+                         round itself emits,
+  uplink_ratio           raw-uplink bytes / codec-uplink bytes.
+
+Emits one ``scaffold-bench/v1`` record per codec —
+``python -m benchmarks.bench_compression`` writes ``BENCH_compression.json``
+(validated by .github/scripts/check_bench_json.py and uploaded by the CI
+bench job; ``--smoke`` is the CI-speed preset).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_argparser, bench_cli
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer, compressor_names
+from repro.data import make_similarity_quadratics, quadratic_loss
+
+N, S, K, DIM = 20, 4, 10, 20
+
+
+def _make_trainer(codec: str, *, k: int, downlink: str, iters: int,
+                  seed: int = 0, ds=None):
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=N, num_sampled=S,
+                        local_steps=K, local_batch=1, eta_l=0.1,
+                        compress=codec, compress_k=k,
+                        compress_downlink=downlink)
+    init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+    return FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed,
+                            scan_rounds=iters)
+
+
+def bench_codec(codec: str, *, k: int, downlink: str, iters: int, ds):
+    tr = _make_trainer(codec, k=k, downlink=downlink, iters=iters, ds=ds)
+    assert tr.scan_active, (codec, tr.scan_fallback_reason)
+    tr.run(iters)  # compile the R=iters chunk outside timing
+    t0 = time.perf_counter()
+    tr.run(iters)
+    jax.block_until_ready(tr.x)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    m = tr.history[-1]
+    return {
+        "bench": "compression",
+        "codec": codec,
+        "downlink": downlink,
+        "compress_k": k,
+        "mode": "scanned",
+        "scan_chunk": iters,
+        "us_per_round": us,
+        "rounds_per_s": 1e6 / max(us, 1e-9),
+        "bytes_up_per_round": m["bytes_up"],
+        "bytes_down_per_round": m["bytes_down"],
+        "final_loss": m["loss"],
+    }
+
+
+def run(*, iters: int = 64, k: int = 4, downlink: str = "none", seed: int = 0):
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=8.0, mu=0.3,
+                                    seed=seed)
+    rows = [bench_codec(c, k=k, downlink=downlink, iters=iters, ds=ds)
+            for c in compressor_names()]
+    raw_up = next(r for r in rows if r["codec"] == "none")
+    for r in rows:
+        r["uplink_ratio"] = (raw_up["bytes_up_per_round"]
+                             / max(r["bytes_up_per_round"], 1e-9))
+        print(f"compression_{r['codec']:10s}: "
+              f"{r['us_per_round']/1e3:7.2f} ms/round "
+              f"({r['rounds_per_s']:8.0f} rounds/s) | "
+              f"up {r['bytes_up_per_round']:7.0f} B "
+              f"({r['uplink_ratio']:.2f}x) | "
+              f"down {r['bytes_down_per_round']:7.0f} B")
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, iters: int = 64,
+         k: int = 4, downlink: str = "none"):
+    del fast  # scale rides on --iters/--smoke (no --full, like bench_round)
+    if smoke:
+        iters = min(iters, 16)
+    return run(iters=iters, k=k, downlink=downlink)
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed preset (clamps the scan chunk to 16)")
+    ap.add_argument("--iters", type=int, default=64,
+                    help="timed rounds (also the scan chunk size)")
+    ap.add_argument("--k", type=int, default=4,
+                    help="compress_k for topk_ef/randk_ef")
+    ap.add_argument("--downlink", default="none",
+                    help="downlink codec applied across the sweep")
+    bench_cli("compression", main, parser=ap,
+              forward=("smoke", "iters", "k", "downlink"))

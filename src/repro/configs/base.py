@@ -173,14 +173,31 @@ class FedRoundSpec:
     server_beta1: float = 0.9
     server_beta2: float = 0.99
     server_eps: float = 1e-8
-    # beyond-paper: int8 uplink compression of (Δy, Δc) with client-side
-    # error feedback (core/compression.py)
-    compress_uplink: bool = False
+    # beyond-paper: uplink compression of the client deltas with
+    # client-side error feedback. ``compress`` names a codec in the
+    # repro.core.compression registry (none | int8_ef | topk_ef |
+    # randk_ef | sign_ef) and is the source of truth; after construction
+    # it is always a concrete name. ``compress_uplink`` is back-compat
+    # constructor sugar ("" + True -> int8_ef, the pre-registry codec),
+    # declared as an InitVar so ``dataclasses.replace`` never carries a
+    # stale copy: replace(spec, compress=...) flips compression freely,
+    # while an explicitly contradictory flag (e.g. replace(spec,
+    # compress_uplink=False) on a compressed spec) fails loudly in
+    # __post_init__ instead of being silently overwritten. Reads of
+    # ``spec.compress_uplink`` hit the property installed below the
+    # class: the live ``compress != "none"`` mirror.
+    compress: str = ""
+    compress_uplink: dataclasses.InitVar[Optional[bool]] = None
+    # k kept coordinates per leaf for the topk_ef / randk_ef codecs
+    compress_k: int = 32
+    # optional compression of the server->client broadcast (x, c) pair
+    # (stateless: the server re-sends fresh state every round)
+    compress_downlink: str = "none"
     # paper §2 "weighted case": aggregate client deltas weighted by their
     # dataset sizes instead of uniformly
     weighted_aggregation: bool = False
 
-    def __post_init__(self):
+    def __post_init__(self, compress_uplink):
         # lazy import: the registries live above configs in the layering
         from repro.core.api import (
             algorithm_names,
@@ -188,10 +205,36 @@ class FedRoundSpec:
             server_optimizer_names,
         )
 
+        from repro.core.compression import compressor_names
+
         assert self.algorithm in algorithm_names(), (
             self.algorithm, algorithm_names())
         assert self.server_optimizer in ("",) + server_optimizer_names(), (
             self.server_optimizer, server_optimizer_names())
+        if self.compress == "":
+            # only an *explicit* bool resolves "" to the legacy codec; a
+            # carried _CompressUplinkMirror (replace(spec, compress=""))
+            # must not smuggle the pre-replace codec back in as int8_ef
+            explicit = (compress_uplink
+                        if isinstance(compress_uplink, bool) else False)
+            object.__setattr__(
+                self, "compress", "int8_ef" if explicit else "none")
+        assert self.compress in compressor_names(), (
+            self.compress, compressor_names())
+        assert self.compress_downlink in compressor_names(), (
+            self.compress_downlink, compressor_names())
+        assert self.compress_k >= 1, self.compress_k
+        # An explicit bool flag must agree with the resolved codec —
+        # reject a contradiction (e.g. replace(spec, compress_uplink=
+        # False) on a compressed spec) instead of silently overriding.
+        # A carried _CompressUplinkMirror (dataclasses.replace re-passes
+        # the property value) reflects the *pre-replace* codec and is
+        # ignored: ``compress`` is the source of truth.
+        if isinstance(compress_uplink, bool):
+            assert compress_uplink == (self.compress != "none"), (
+                f"compress_uplink={compress_uplink} contradicts "
+                f"compress={self.compress!r}; set compress "
+                f"('none' disables) instead of the back-compat flag")
         algo = get_algorithm(self.algorithm)
         if (self.server_optimizer == "" and self.server_momentum == 0.0
                 and algo.default_server_optimizer == "momentum"):
@@ -215,6 +258,9 @@ class FedRoundSpec:
             assert not self.compress_uplink, (
                 f"compress_uplink has no effect for whole-batch "
                 f"{self.algorithm!r}")
+            assert self.compress_downlink == "none", (
+                f"compress_downlink has no effect for whole-batch "
+                f"{self.algorithm!r}")
         assert self.scaffold_option in ("I", "II")
         assert self.strategy in ("client_parallel", "client_sequential")
         assert self.num_sampled <= self.num_clients
@@ -222,6 +268,25 @@ class FedRoundSpec:
     @property
     def global_batch(self) -> int:
         return self.num_sampled * self.local_steps * self.local_batch
+
+
+class _CompressUplinkMirror(int):
+    """Truthy/falsy view of ``compress != "none"`` returned by the
+    ``FedRoundSpec.compress_uplink`` property. An ``int`` subclass
+    (``bool`` is final) so ``__post_init__`` can tell the value
+    ``dataclasses.replace`` automatically re-passes (a stale mirror of
+    the *pre-replace* codec — recomputed, never binding) apart from an
+    explicit user bool (validated against the codec)."""
+
+    def __repr__(self):
+        return repr(bool(self))
+
+
+# the live "uplink codec active" mirror (InitVars are not stored, so the
+# read surface is installed post-class; the generated __init__ captured
+# the InitVar default before this assignment)
+FedRoundSpec.compress_uplink = property(
+    lambda self: _CompressUplinkMirror(self.compress != "none"))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,10 +11,13 @@ Entry points:
   FederatedTrainer — host controller (sampling + stateful-client stores;
                      sync / pipelined / scanned execution modes)
 
-Extensibility (DESIGN.md §9):
+Extensibility (DESIGN.md §9/§11):
   Algorithm / register_algorithm            — per-round algorithm strategy
   ServerOptimizer / register_server_optimizer — server step on the
                                               aggregated delta
+  Compressor / register_compressor          — uplink/downlink codec with a
+                                              scan-carryable error-feedback
+                                              residual
 """
 from repro.core.api import (  # noqa: F401
     Algorithm,
@@ -31,6 +34,14 @@ from repro.core.api import (  # noqa: F401
     resolve_server_optimizer,
     run_rounds,
     server_optimizer_names,
+)
+from repro.core.compression import (  # noqa: F401
+    Compressor,
+    compressor_names,
+    get_compressor,
+    register_compressor,
+    resolve_compressor,
+    round_comm_bytes,
 )
 from repro.core.controller import (  # noqa: F401
     ClientStateStore,

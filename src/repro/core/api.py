@@ -396,8 +396,9 @@ def init_server_state(spec, x) -> ServerState:
 
 
 def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
-               data, batch_fn, sample_key, data_key, start_round=0,
-               sizes=None, use_fused_update: bool = False, shard_fn=None):
+               data, batch_fn, sample_key, data_key, comp_key=None,
+               start_round=0, sizes=None, use_fused_update: bool = False,
+               shard_fn=None):
     """R communication rounds as one ``lax.scan`` — zero host round trips.
 
     The host loop pays per-round dispatch (numpy cohort sampling, host
@@ -413,6 +414,11 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
     client_store: full client-state store, leaves ``(N, ...)`` (shard its
                   leading axis over "data" via
                   ``dist.partition_client_store`` on a multi-device mesh).
+                  With an active uplink codec (``spec.compress_uplink``)
+                  this is the dict ``{"c_i": <x-like tree>, "residual":
+                  <fp32 x-like tree>}`` — the error-feedback residuals
+                  are ordinary store rows, gathered/scattered inside the
+                  scan exactly like the control variates (DESIGN.md §11).
     R:            trip count (python int — static under jit).
     data:         dataset device arrays (``dataset.device_data()``).
     batch_fn:     pure ``(data, ids, key) -> batches`` with leaves
@@ -421,43 +427,61 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
                   ``device_sample_ids(sample_key, t, N, S)``.
     data_key:     base key of the data stream; round ``t`` uses
                   ``fold_in(data_key, t)``.
+    comp_key:     base key of the compression stream; round ``t`` uses
+                  ``fold_in(comp_key, t)``. Required only when a
+                  configured codec is keyed (``randk_ef``).
     start_round:  absolute index of the first round (int or traced scalar
                   — traced keeps one compilation across resume chunks).
     sizes:        optional ``(N,)`` per-client dataset sizes for
                   ``spec.weighted_aggregation``.
 
-    RNG contract: both streams are *stateless* functions of (base key,
-    absolute round index), so a host loop calling ``run_round`` once per
-    round with the same keys — or this scan re-entered at any chunk
+    RNG contract: all three streams are *stateless* functions of (base
+    key, absolute round index), so a host loop calling ``run_round`` once
+    per round with the same keys — or this scan re-entered at any chunk
     boundary after a checkpoint restore — consumes identical randomness
     and produces bit-for-bit identical trajectories
     (tests/test_scan_engine.py).
 
     Returns ``(server, client_store, metrics)`` with metrics leaves
-    stacked ``(R,)``.
+    stacked ``(R,)`` and ``client_store`` in the input structure
+    (residuals included when compressing).
     """
     # lazy imports: rounds.py imports this module at top level
+    from repro.core.compression import get_compressor, resolve_compressor
     from repro.core.rounds import run_round
     from repro.core.sampling import device_sample_ids
     from repro.core.tree import tree_gather, tree_scatter
 
-    assert not spec.compress_uplink, (
-        "uplink error-feedback residuals live in a host store; the "
-        "controller falls back to the host loop for compress_uplink")
+    up = get_compressor(resolve_compressor(spec))
+    carry_residuals = up.stateful
+    if carry_residuals:
+        assert (isinstance(client_store, dict)
+                and {"c_i", "residual"} <= set(client_store)), (
+            f"uplink codec {up.name!r} carries error-feedback residuals: "
+            f"pass client_store as {{'c_i': ..., 'residual': ...}} with "
+            f"(N, ...) leaves")
 
     def body(carry, t):
         server, store = carry
         ids = device_sample_ids(sample_key, t, spec.num_clients,
                                 spec.num_sampled)
         batches = batch_fn(data, ids, jax.random.fold_in(data_key, t))
+        gathered = tree_gather(store, ids)
         clients = ClientRoundState(
-            c_i=tree_gather(store, ids),
+            c_i=gathered["c_i"] if carry_residuals else gathered,
+            uplink_residual=(gathered["residual"] if carry_residuals
+                             else None),
             weights=(sizes[ids].astype(jnp.float32)
                      if sizes is not None else None),
         )
         out = run_round(grad_fn, spec, server, clients, batches,
-                        use_fused_update=use_fused_update, shard_fn=shard_fn)
-        store = tree_scatter(store, ids, out.clients.c_i)
+                        use_fused_update=use_fused_update, shard_fn=shard_fn,
+                        comp_key=(jax.random.fold_in(comp_key, t)
+                                  if comp_key is not None else None))
+        new_rows = (
+            {"c_i": out.clients.c_i, "residual": out.clients.uplink_residual}
+            if carry_residuals else out.clients.c_i)
+        store = tree_scatter(store, ids, new_rows)
         return (out.server, store), out.metrics
 
     ts = jnp.arange(R, dtype=jnp.int32) + jnp.asarray(start_round, jnp.int32)

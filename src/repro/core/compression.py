@@ -1,20 +1,359 @@
-"""Communication compression for the round uplink (beyond-paper, but squarely
-in the paper's communication-efficiency theme and its own cited machinery —
-error feedback is Karimireddy et al. 2019, "Error feedback fixes SignSGD").
+"""Pluggable communication compression for the round uplink/downlink.
 
-Clients upload (Δy, Δc) once per round; uniform int8 quantization with a
-per-leaf scale cuts uplink bytes 4× (fp32) / 2× (bf16). The quantization
-error is kept client-side and added to the next round's delta (error
-feedback), so the long-run average update is unbiased.
+SCAFFOLD's contribution is cutting communication *rounds*; this module
+cuts the per-round communication *volume* and composes with the
+control-variate machinery (error feedback is the paper authors' own
+"Error feedback fixes SignSGD", Karimireddy et al. 2019; EF composes
+provably with control-variate methods — Mangold et al. 2025, Cheng et
+al. 2023).
 
-Pure functions over pytrees — composable with any of the four algorithms.
+A :class:`Compressor` is a pytree-level codec with a *fixed-shape* fp32
+error-feedback residual, which is what makes it device-native: the
+residual carries through ``lax.scan`` as part of the ``(N, ...)``
+client store of the scanned engine (``core/api.run_rounds``) instead of
+living in a host-side numpy store. Registered codecs (mirroring the
+``Algorithm`` / ``ServerOptimizer`` registries of DESIGN.md §9):
+
+  ``none``      identity (also the downlink default). Stateless.
+  ``int8_ef``   per-leaf symmetric int8 quantization + EF residual
+                (the former hardwired uplink codec).
+  ``topk_ef``   per-leaf top-k by magnitude (k = ``spec.compress_k``),
+                values + int32 indices on the wire.
+  ``randk_ef``  rand-k with *shared randomness*: the mask is a stateless
+                function of ``fold_in(key, t, client)`` so the server
+                re-derives the indices from the key and only the k
+                values travel. Still error-feedback (the unsent mass
+                rides the residual).
+  ``sign_ef``   1-bit sign with a per-leaf mean-|x| scale
+                (EF-SignSGD).
+
+The engine only ever applies ``round_trip`` (= decode∘encode plus the
+residual update) since both endpoints live in one simulation, but the
+encode/decode split keeps the wire format — and therefore the bytes
+accounting in ``round_comm_bytes`` — honest.
+
+Every codec is pure jax and safe under jit / vmap (one codec call per
+sampled client) / lax.scan (the scanned engine) / sharding (leaf-wise
+maps preserve per-leaf shardings). Contracts are enforced by
+``tests/test_compressors.py`` (hypothesis property tests) and the
+equivalence axes in ``tests/test_scan_engine.py``.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# leaf helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_bytes(tree) -> int:
+    """Bytes of an uncompressed pytree (the raw wire size)."""
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def _f32(tree):
+    return jax.tree.map(lambda a: a.astype(jnp.float32), tree)
+
+
+def _zeros_f32_like(tree):
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), tree)
+
+
+def _leaf_keys(key, tree):
+    """One independent key per leaf (enumeration order = flatten order)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(
+        treedef, [jax.random.fold_in(key, i) for i in range(len(leaves))])
+
+
+def _map_payload(fn, payload, like):
+    """``fn(payload_node, leaf)`` over the template leaves of ``like``.
+
+    Wire payloads put a *dict per template leaf* (e.g. ``{"idx", "val"}``)
+    at each array position, so mapping must be driven by the template's
+    treedef (``flatten_up_to``) — an ``is_leaf`` on the payload would
+    misfire on dict-shaped *containers* of the user's param tree.
+    """
+    leaves, treedef = jax.tree.flatten(like)
+    parts = treedef.flatten_up_to(payload)
+    return jax.tree.unflatten(
+        treedef, [fn(p, l) for p, l in zip(parts, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# the codec strategy
+# ---------------------------------------------------------------------------
+
+
+class Compressor:
+    """One uplink/downlink codec = encode/decode over a param-like pytree.
+
+    stateful:  the codec is lossy and carries a client-side fp32
+               error-feedback residual (fixed delta shape — scan/vmap
+               carryable, storable as ``(N, ...)`` device-store leaves).
+    needs_key: the codec consumes a PRNG key (shared randomness); the
+               engine derives it as ``fold_in(fold_in(comp_key, 0), i)``
+               for client ``i`` of round ``t`` (``comp_key`` itself is
+               ``fold_in(base, t)`` — stateless in the round index, like
+               the cohort/data streams of DESIGN.md §10).
+    """
+
+    name: str = ""
+    stateful: bool = True
+    needs_key: bool = False
+
+    def encode(self, spec, tree, key=None) -> Any:
+        """Pytree -> wire payload (a pytree of arrays)."""
+        raise NotImplementedError
+
+    def decode(self, spec, payload, like) -> Any:
+        """Wire payload -> fp32 reconstruction shaped like ``like``."""
+        raise NotImplementedError
+
+    def payload_bytes(self, spec, template) -> int:
+        """Static wire bytes of ``encode(template)`` (bytes accounting)."""
+        raise NotImplementedError
+
+    def init_residual(self, template):
+        """Fresh error-feedback residual (fp32 zeros), or None if the
+        codec is stateless."""
+        return _zeros_f32_like(template) if self.stateful else None
+
+    def apply_stateless(self, spec, tree, key=None):
+        """decode(encode(tree)) in the tree's own dtypes — the downlink
+        broadcast path (no residual: the server re-sends fresh state
+        every round, so downlink error does not accumulate)."""
+        rec = self.decode(spec, self.encode(spec, tree, key=key), tree)
+        return jax.tree.map(lambda r, t: r.astype(t.dtype), rec, tree)
+
+    def round_trip(self, spec, delta, residual=None, key=None
+                   ) -> Tuple[Any, Any]:
+        """Error-feedback compression of an uplink ``delta``.
+
+        Adds the carried ``residual`` (None = zeros), encodes/decodes,
+        and returns ``(reconstruction, new_residual)`` — reconstruction
+        in delta's dtypes, residual in fp32. The telescoping invariant
+        (sum of reconstructions + final residual == sum of raw deltas)
+        is what makes the long-run average update unbiased. A stateless
+        codec applies encode/decode without error feedback and passes
+        ``residual`` through untouched.
+        """
+        if not self.stateful:
+            return self.apply_stateless(spec, delta, key=key), residual
+        d32 = _f32(delta)
+        if residual is not None:
+            d32 = jax.tree.map(jnp.add, d32, residual)
+        rec32 = self.decode(spec, self.encode(spec, d32, key=key), d32)
+        new_residual = jax.tree.map(jnp.subtract, d32, rec32)
+        rec = jax.tree.map(lambda r, d: r.astype(d.dtype), rec32, delta)
+        return rec, new_residual
+
+
+class NoCompression(Compressor):
+    """Identity codec (and the explicit 'compression off' registry entry:
+    the engine branches on ``name != "none"``, never on None checks)."""
+
+    name = "none"
+    stateful = False
+
+    def encode(self, spec, tree, key=None):
+        return tree
+
+    def decode(self, spec, payload, like):
+        return payload
+
+    def payload_bytes(self, spec, template) -> int:
+        return tree_bytes(template)
+
+
+class Int8EF(Compressor):
+    """Per-leaf symmetric int8 quantization (the former hardwired codec):
+    4x uplink cut on fp32, one fp32 scale per leaf on the wire."""
+
+    name = "int8_ef"
+
+    def encode(self, spec, tree, key=None):
+        q, scales = quantize_int8(tree)
+        return {"q": q, "scale": scales}
+
+    def decode(self, spec, payload, like):
+        return dequantize_int8(payload["q"], payload["scale"])
+
+    def payload_bytes(self, spec, template) -> int:
+        return compressed_uplink_bytes(template)
+
+
+class TopKEF(Compressor):
+    """Per-leaf top-k by magnitude; k = min(spec.compress_k, leaf size).
+    Wire format is k (value, int32 index) pairs per leaf."""
+
+    name = "topk_ef"
+
+    def encode(self, spec, tree, key=None):
+        def enc(x):
+            flat = x.reshape(-1)
+            k = min(int(spec.compress_k), flat.shape[0])
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            return {"idx": idx.astype(jnp.int32), "val": flat[idx]}
+
+        return jax.tree.map(enc, tree)
+
+    def decode(self, spec, payload, like):
+        def dec(p, l):
+            flat = jnp.zeros((l.size,), jnp.float32)
+            return flat.at[p["idx"]].set(p["val"].astype(jnp.float32)
+                                         ).reshape(l.shape)
+
+        return _map_payload(dec, payload, like)
+
+    def payload_bytes(self, spec, template) -> int:
+        return sum(8 * min(int(spec.compress_k), l.size)
+                   for l in jax.tree.leaves(template))
+
+
+class RandKEF(Compressor):
+    """Rand-k with shared randomness: the k kept coordinates per leaf are
+    ``permutation(fold_in(key, leaf))[:k]`` — a stateless function of the
+    key, so only the k values travel (no index bytes: ``decode``
+    re-derives the mask from the shared key, which both endpoints hold —
+    the payload carries it only as a simulation convenience). The unsent
+    mass rides the EF residual, so no d/k unbiasing rescale is needed."""
+
+    name = "randk_ef"
+    needs_key = True
+
+    def _mask(self, spec, k_leaf, size: int):
+        k = min(int(spec.compress_k), size)
+        return jax.random.permutation(k_leaf, size)[:k]
+
+    def encode(self, spec, tree, key=None):
+        if key is None:
+            raise ValueError("randk_ef is keyed: pass a comp key "
+                             "(engine: run_round(..., comp_key=...))")
+
+        def enc(x, k_leaf):
+            flat = x.reshape(-1)
+            return {"val": flat[self._mask(spec, k_leaf, flat.shape[0])],
+                    "key": k_leaf}
+
+        return jax.tree.map(enc, tree, _leaf_keys(key, tree))
+
+    def decode(self, spec, payload, like):
+        def dec(p, l):
+            idx = self._mask(spec, p["key"], l.size)
+            flat = jnp.zeros((l.size,), jnp.float32)
+            return flat.at[idx].set(p["val"].astype(jnp.float32)
+                                    ).reshape(l.shape)
+
+        return _map_payload(dec, payload, like)
+
+    def payload_bytes(self, spec, template) -> int:
+        return sum(4 * min(int(spec.compress_k), l.size)
+                   for l in jax.tree.leaves(template))
+
+
+class SignEF(Compressor):
+    """1-bit sign with a per-leaf mean-|x| scale (EF-SignSGD, Karimireddy
+    et al. 2019): ~32x uplink cut on fp32 plus one fp32 scale per leaf.
+    The sign is strictly binary (0.0 encodes as +1, its error rides the
+    residual) — ``jnp.sign``'s ternary output couldn't ship in the 1
+    bit/element the bytes accounting charges."""
+
+    name = "sign_ef"
+
+    def encode(self, spec, tree, key=None):
+        def enc(x):
+            xf = x.astype(jnp.float32)
+            return {"sign": jnp.where(xf >= 0.0, 1, -1).astype(jnp.int8),
+                    "scale": jnp.mean(jnp.abs(xf))}
+
+        return jax.tree.map(enc, tree)
+
+    def decode(self, spec, payload, like):
+        return _map_payload(
+            lambda p, l: p["sign"].astype(jnp.float32) * p["scale"],
+            payload, like)
+
+    def payload_bytes(self, spec, template) -> int:
+        return sum(-(-l.size // 8) + 4 for l in jax.tree.leaves(template))
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors Algorithm / ServerOptimizer in core/api.py)
+# ---------------------------------------------------------------------------
+
+
+_COMPRESSORS: Dict[str, Compressor] = {}
+
+
+def register_compressor(codec: Compressor) -> Compressor:
+    """Register a ``Compressor`` instance under its ``name``."""
+    assert codec.name, "Compressor subclasses must set a name"
+    _COMPRESSORS[codec.name] = codec
+    return codec
+
+
+def get_compressor(name: str) -> Compressor:
+    try:
+        return _COMPRESSORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown compressor {name!r}; registered: {compressor_names()}"
+        ) from None
+
+
+def compressor_names() -> Tuple[str, ...]:
+    return tuple(sorted(_COMPRESSORS))
+
+
+for _c in (NoCompression(), Int8EF(), TopKEF(), RandKEF(), SignEF()):
+    register_compressor(_c)
+
+
+def resolve_compressor(spec) -> str:
+    """The spec's uplink codec name. ``FedRoundSpec.__post_init__``
+    normalises ``compress`` against the back-compat ``compress_uplink``
+    flag; the getattr fallback keeps duck-typed specs working."""
+    name = getattr(spec, "compress", "")
+    if not name:
+        name = ("int8_ef" if getattr(spec, "compress_uplink", False)
+                else "none")
+    return name
+
+
+def resolve_downlink(spec) -> str:
+    return getattr(spec, "compress_downlink", "none") or "none"
+
+
+def round_comm_bytes(spec, x, *, stateful_clients: bool) -> Dict[str, int]:
+    """Static per-round communicated bytes (surfaced as RoundOutput
+    metrics ``bytes_up`` / ``bytes_down``).
+
+    Uplink, per sampled client: the dy payload through the uplink codec,
+    plus raw dc bytes for stateful-client algorithms (only dy is
+    compressed — perturbing the control-variate stream would break the
+    drift correction the paper is about). Downlink, per sampled client:
+    the broadcast ``(x, c)`` pair (``x`` alone for stateless-client
+    algorithms) through the downlink codec.
+    """
+    up = get_compressor(resolve_compressor(spec))
+    down = get_compressor(resolve_downlink(spec))
+    per_up = up.payload_bytes(spec, x)
+    if stateful_clients:
+        per_up += tree_bytes(x)
+    per_down = down.payload_bytes(spec, (x, x) if stateful_clients else (x,))
+    return {"bytes_up": spec.num_sampled * per_up,
+            "bytes_down": spec.num_sampled * per_down}
+
+
+# ---------------------------------------------------------------------------
+# int8 primitives (kept as module functions: used by Int8EF and the
+# pre-registry call sites / tests)
+# ---------------------------------------------------------------------------
 
 
 def quantize_int8(tree) -> Tuple[Any, Any]:
@@ -40,7 +379,8 @@ def dequantize_int8(q_tree, scales, dtype=jnp.float32):
 
 
 def compress_delta(delta, residual=None):
-    """Error-feedback compression of an uplink delta.
+    """Error-feedback int8 compression of an uplink delta (pre-registry
+    surface; ``Int8EF.round_trip`` is the engine path).
 
     Returns (quantized, scales, new_residual). ``residual`` is the client's
     carried quantization error from the previous round (None = zeros).
@@ -59,7 +399,7 @@ def compress_delta(delta, residual=None):
 
 def uplink_bytes(tree) -> int:
     """Bytes of an uncompressed uplink pytree."""
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+    return tree_bytes(tree)
 
 
 def compressed_uplink_bytes(tree) -> int:

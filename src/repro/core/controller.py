@@ -4,7 +4,9 @@ Owns:
   * the typed ``ServerState`` (x, c, server-optimizer slots) on device,
   * the *full* N-client host stores (numpy, one slot per client — the
     paper's "stateful clients"): control variates, plus uplink
-    error-feedback residuals when ``spec.compress_uplink``,
+    error-feedback residuals when an uplink codec is active
+    (``spec.compress`` — DESIGN.md §11; in scan mode both live in the
+    device-resident store and the host pair is a checkpoint mirror),
   * the sampler and the per-round gather/scatter of sampled clients'
     round state (``ClientRoundState``),
   * the jitted typed round function (``core/rounds.run_round``).
@@ -55,6 +57,12 @@ from repro.core.api import (
     get_algorithm,
     init_server_state,
     run_rounds,
+)
+from repro.core.compression import (
+    get_compressor,
+    resolve_compressor,
+    resolve_downlink,
+    round_comm_bytes,
 )
 from repro.core.rounds import run_round
 from repro.core.sampling import (
@@ -160,18 +168,37 @@ class FederatedTrainer:
         self.server = init_server_state(spec, init_params(key))
         self.store = ClientStateStore(self.server.x, spec.num_clients)
         # uplink error-feedback residuals persist per client across rounds
-        # (fp32, like compression.compress_delta's carried error)
+        # (fp32; gated on the codec's ``stateful`` — the same predicate
+        # run_rounds uses for the device-store layout, so a registered
+        # stateless codec needs no residual rows anywhere)
+        self.compressor = get_compressor(resolve_compressor(spec))
         self.residual_store = (
             ClientStateStore(tree_cast(self.server.x, jnp.float32),
                              spec.num_clients)
-            if spec.compress_uplink else None)
+            if self.compressor.stateful else None)
         self.sampler = ClientSampler(spec.num_clients, spec.num_sampled, seed)
         self._rng = np.random.default_rng(seed + 1)
+        # compression stream: stateless in the round index like the scan's
+        # cohort/data streams — round t folds _comp_base_key by t. Only
+        # keyed codecs (randk_ef) consume it.
+        self._comp_base_key = jax.random.key(seed + 2)
+        self._comp_keyed = (
+            self.compressor.needs_key
+            or get_compressor(resolve_downlink(spec)).needs_key)
+        # exact per-round communicated bytes (python ints -> float is
+        # lossless well past any model size); the device metrics carry
+        # the same numbers as fp32 scalars, inexact above 2^24 B/round,
+        # so history/logging use this host-side copy
+        self._comm_bytes = {
+            k: float(v) for k, v in round_comm_bytes(
+                spec, self.server.x,
+                stateful_clients=self.algorithm.stateful_clients).items()}
         grad_fn = make_grad_fn(loss_fn)
 
-        def round_fn(server, clients, batches):
+        def round_fn(server, clients, batches, comp_key):
             return run_round(grad_fn, spec, server, clients, batches,
-                             use_fused_update=use_fused_update)
+                             use_fused_update=use_fused_update,
+                             comp_key=comp_key)
 
         self.round_fn = jax.jit(round_fn,
                                 donate_argnums=(0, 1) if donate else ())
@@ -204,28 +231,41 @@ class FederatedTrainer:
             self._device_sizes = (
                 jnp.asarray(dataset.device_client_sizes())
                 if spec.weighted_aggregation else None)
-            # full (N, ...) control-variate store, device-resident between
-            # chunks; the host self.store is a lazily-synced mirror that
-            # only checkpointing reads
-            self.device_store = jax.tree.map(
+            # full (N, ...) client store, device-resident between chunks;
+            # with an active uplink codec the error-feedback residuals are
+            # ordinary store rows riding next to the control variates. The
+            # host self.store / self.residual_store pair is a lazily-synced
+            # mirror that only checkpointing reads
+            c_store = jax.tree.map(
                 lambda a: jnp.zeros((spec.num_clients,) + a.shape,
                                     jnp.asarray(a).dtype),
                 self.server.x)
+            if self.compressor.stateful:
+                self.device_store = {
+                    "c_i": c_store,
+                    "residual": jax.tree.map(
+                        lambda a: jnp.zeros(
+                            (spec.num_clients,) + jnp.asarray(a).shape,
+                            jnp.float32),
+                        self.server.x),
+                }
+            else:
+                self.device_store = c_store
             self._host_store_dirty = False
             batch_fn = self._device_batch_fn
 
-            def chunk_fn(server, store, data, sample_key, data_key, sizes,
-                         t0, R):
+            def chunk_fn(server, store, data, sample_key, data_key,
+                         comp_key, sizes, t0, R):
                 return run_rounds(
                     grad_fn, spec, server, store, R, data=data,
                     batch_fn=batch_fn, sample_key=sample_key,
-                    data_key=data_key, start_round=t0, sizes=sizes,
-                    use_fused_update=use_fused_update)
+                    data_key=data_key, comp_key=comp_key, start_round=t0,
+                    sizes=sizes, use_fused_update=use_fused_update)
 
             # R is static (one compile per distinct chunk length); t0 is
             # traced so resume chunks reuse the compilation
             self._scan_fn = jax.jit(
-                chunk_fn, static_argnums=(7,),
+                chunk_fn, static_argnums=(8,),
                 donate_argnums=(0, 1) if donate else ())
 
     @property
@@ -239,9 +279,6 @@ class FederatedTrainer:
         if not (hasattr(d, "device_data") and hasattr(d, "device_batch_fn")):
             return (f"dataset {type(d).__name__} has no device-data protocol "
                     f"(device_data()/device_batch_fn(K, b))")
-        if self.spec.compress_uplink:
-            return ("uplink error-feedback residuals live in a host store; "
-                    "compression stays on the host loop")
         if (self.spec.weighted_aggregation
                 and not hasattr(d, "device_client_sizes")):
             return ("weighted_aggregation needs "
@@ -291,7 +328,8 @@ class FederatedTrainer:
         if self._prefetch:
             return self._prefetch[0].host_state
         state = {"sampler": self.sampler.get_state(),
-                 "data_rng": self._rng.bit_generator.state}
+                 "data_rng": self._rng.bit_generator.state,
+                 "comp_key": key_state(self._comp_base_key)}
         if self._scan_mode:
             state["device_sampler"] = self.device_sampler.get_state()
             state["device_data_key"] = key_state(self._data_base_key)
@@ -301,6 +339,8 @@ class FederatedTrainer:
         self._prefetch.clear()
         self.sampler.set_state(state["sampler"])
         self._rng.bit_generator.state = state["data_rng"]
+        if "comp_key" in state:
+            self._comp_base_key = key_from_state(state["comp_key"])
         if self._scan_mode and "device_sampler" in state:
             self.device_sampler.set_state(state["device_sampler"])
             self._data_base_key = key_from_state(state["device_data_key"])
@@ -310,7 +350,8 @@ class FederatedTrainer:
         synchronous loop (prefetching only moves the calls earlier in wall
         time, never reorders them across rounds)."""
         host_state = {"sampler": self.sampler.get_state(),
-                      "data_rng": self._rng.bit_generator.state}
+                      "data_rng": self._rng.bit_generator.state,
+                      "comp_key": key_state(self._comp_base_key)}
         ids = self.sampler.sample()
         c_i = self.store.gather(ids)
         uplink_res = (self.residual_store.gather(ids)
@@ -348,7 +389,12 @@ class FederatedTrainer:
             weights=(jnp.asarray(inp.weights)
                      if inp.weights is not None else None),
         )
-        out = self.round_fn(self.server, clients, inp.batches)
+        # per-round compression key, stateless in the round index (only
+        # computed for keyed codecs; dispatch order == execution order so
+        # round_idx is this round's absolute index even when pipelined)
+        comp_key = (jax.random.fold_in(self._comp_base_key, self.round_idx)
+                    if self._comp_keyed else None)
+        out = self.round_fn(self.server, clients, inp.batches, comp_key)
         self.server = out.server
         return out.clients, out.metrics
 
@@ -357,21 +403,34 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
 
     def sync_host_store(self) -> None:
-        """Mirror the device-resident client store into the host store.
-        Checkpointing reads the host store; no-op outside scan mode or
+        """Mirror the device-resident client store (control variates +
+        uplink residuals when compressing) into the host stores.
+        Checkpointing reads the host stores; no-op outside scan mode or
         when the mirror is current."""
         if self._scan_mode and self._host_store_dirty:
-            self.store.scatter(np.arange(self.spec.num_clients),
-                               jax.tree.map(np.asarray, self.device_store))
+            all_ids = np.arange(self.spec.num_clients)
+            dev = jax.tree.map(np.asarray, self.device_store)
+            if self.residual_store is not None:
+                self.store.scatter(all_ids, dev["c_i"])
+                self.residual_store.scatter(all_ids, dev["residual"])
+            else:
+                self.store.scatter(all_ids, dev)
             self._host_store_dirty = False
 
     def push_host_store_to_device(self) -> None:
-        """Reload the device store from the host store after a checkpoint
-        restore scattered into it (checkpoint.load_trainer)."""
+        """Reload the device store from the host stores after a checkpoint
+        restore scattered into them (checkpoint.load_trainer)."""
         if self._scan_mode:
-            self.device_store = jax.tree.map(
-                jnp.asarray,
-                self.store.gather(np.arange(self.spec.num_clients)))
+            all_ids = np.arange(self.spec.num_clients)
+            c_store = jax.tree.map(jnp.asarray, self.store.gather(all_ids))
+            if self.residual_store is not None:
+                self.device_store = {
+                    "c_i": c_store,
+                    "residual": jax.tree.map(
+                        jnp.asarray, self.residual_store.gather(all_ids)),
+                }
+            else:
+                self.device_store = c_store
             self._host_store_dirty = False
 
     def _run_scan_chunk(self, R: int):
@@ -380,6 +439,7 @@ class FederatedTrainer:
         server, store, metrics = self._scan_fn(
             self.server, self.device_store, self._device_data,
             self.device_sampler.key, self._data_base_key,
+            self._comp_base_key if self._comp_keyed else None,
             self._device_sizes, self.round_idx, R)
         self.server, self.device_store = server, store
         self._host_store_dirty = True
@@ -388,6 +448,7 @@ class FederatedTrainer:
         for r in range(R):
             self.round_idx += 1
             m = {k: float(v[r]) for k, v in stacked.items()}
+            m.update(self._comm_bytes)  # exact ints over the fp32 metrics
             m["round"] = self.round_idx
             self.history.append(m)
             out.append(m)
@@ -426,6 +487,7 @@ class FederatedTrainer:
                 self._refresh_stale_rows(pending, inp.ids)
         self.round_idx += 1
         out = {k: float(v) for k, v in metrics.items()}
+        out.update(self._comm_bytes)  # exact ints over the fp32 metrics
         out["round"] = self.round_idx
         self.history.append(out)
         return out

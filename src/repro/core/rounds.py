@@ -30,6 +30,14 @@ Two execution strategies with identical algorithm semantics (tested):
                     all-reduce — the paper's "communication round").
   client_sequential lax.scan over the S clients (FSDP-style for models
                     whose state cannot fit one model-parallel group).
+
+Communication compression (DESIGN.md §11) lives at this level, shared by
+both strategies: the uplink codec (``spec.compress``, from the
+``Compressor`` registry) round-trips each client's dy with its carried
+error-feedback residual, and the optional downlink codec
+(``spec.compress_downlink``) transforms the broadcast (x, c) pair the
+clients receive. Every round's metrics include the static
+``bytes_up``/``bytes_down`` accounting.
 """
 from __future__ import annotations
 
@@ -47,6 +55,12 @@ from repro.core.api import (
     get_server_optimizer,
     resolve_server_optimizer,
 )
+from repro.core.compression import (
+    get_compressor,
+    resolve_compressor,
+    resolve_downlink,
+    round_comm_bytes,
+)
 from repro.core.local_solver import local_sgd
 from repro.util import uscan
 from repro.core.tree import (
@@ -62,13 +76,16 @@ def _merge_step_batches(batches):
     return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), batches)
 
 
-def client_update(grad_fn, spec, x, c, c_i, batches, uplink_res=None,
+def client_update(grad_fn, spec, x, c, c_i, batches,
                   use_fused_update: bool = False, shard_fn=None):
     """Local work of one sampled client.
 
     batches: pytree with leaves (K, b, ...). Returns (dy, dc, c_i_new, loss)
-    — dy = y_K - x (model delta), dc = c_i_new - c_i (control delta) —
-    plus the new uplink error-feedback residual when spec.compress_uplink.
+    — dy = y_K - x (model delta), dc = c_i_new - c_i (control delta).
+    ``x`` / ``c`` are whatever the client *received* (the downlink-
+    compressed broadcast when ``spec.compress_downlink``); uplink
+    compression of dy happens at the ``run_round`` level, shared by both
+    client strategies.
     """
     algo = get_algorithm(spec.algorithm)
     correction = algo.local_correction(spec, x, c, c_i)
@@ -86,15 +103,6 @@ def client_update(grad_fn, spec, x, c, c_i, batches, uplink_res=None,
         spec, x, y, c, c_i,
         lambda: grad_fn(x, _merge_step_batches(batches))[0],
     )
-    if spec.compress_uplink:
-        from repro.core.compression import compress_delta, dequantize_int8
-
-        q, scales, new_res = compress_delta(dy, uplink_res)
-        # the server only ever sees the dequantized uplink
-        dy = jax.tree.map(
-            lambda rec, d: rec.astype(d.dtype),
-            dequantize_int8(q, scales), dy)
-        return dy, dc, c_i_new, loss, new_res
     return dy, dc, c_i_new, loss
 
 
@@ -112,6 +120,7 @@ def _whole_batch_round(grad_fn, spec, server, clients, batches) -> RoundOutput:
         "loss": metrics["loss"],
         "drift": jnp.zeros((), jnp.float32),
         "update_norm": tree_norm(tree_sub(x_new, server.x)),
+        **_bytes_metrics(spec, server.x, stateful_clients=False),
     }
     return RoundOutput(
         server=dataclasses.replace(server, x=x_new),
@@ -120,21 +129,62 @@ def _whole_batch_round(grad_fn, spec, server, clients, batches) -> RoundOutput:
     )
 
 
+def _bytes_metrics(spec, x, *, stateful_clients: bool):
+    """Static per-round communicated-bytes metrics (fp32 scalars so they
+    stack under the scanned engine like every other metric — inexact
+    above 2^24 bytes/round; the trainer overwrites its history with the
+    exact ints from ``round_comm_bytes``, which is also the surface for
+    exact consumers)."""
+    return {k: jnp.asarray(v, jnp.float32)
+            for k, v in round_comm_bytes(
+                spec, x, stateful_clients=stateful_clients).items()}
+
+
 def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
               batches, use_fused_update: bool = False,
-              shard_fn=None) -> RoundOutput:
+              shard_fn=None, comp_key=None) -> RoundOutput:
     """One communication round over the S sampled clients (typed API).
 
-    server:  ``ServerState`` (x, c, server-optimizer slots).
-    clients: ``ClientRoundState`` — c_i / uplink residuals with leaves
-             (S, ...), optional (S,) aggregation weights.
-    batches: pytree with leaves (S, K, b, ...).
+    server:   ``ServerState`` (x, c, server-optimizer slots).
+    clients:  ``ClientRoundState`` — c_i / uplink error-feedback
+              residuals with leaves (S, ...), optional (S,) aggregation
+              weights. A None ``uplink_residual`` under an active codec
+              starts from zeros.
+    batches:  pytree with leaves (S, K, b, ...).
+    comp_key: PRNG key of this round's compression stream (derive as
+              ``fold_in(base, t)`` — stateless in the round index, like
+              the cohort/data streams). Required only when a configured
+              codec is keyed (``randk_ef``); client ``i`` then draws
+              ``fold_in(fold_in(comp_key, 0), i)`` and the downlink
+              broadcast draws ``fold_in(comp_key, 1)``, identically
+              under both client strategies and all three execution
+              modes.
     """
     algo = get_algorithm(spec.algorithm)
     if algo.whole_batch:
         return _whole_batch_round(grad_fn, spec, server, clients, batches)
 
+    up = get_compressor(resolve_compressor(spec))
+    down = get_compressor(resolve_downlink(spec))
+    if (up.needs_key or down.needs_key) and comp_key is None:
+        raise ValueError(
+            f"compressors ({up.name!r}/{down.name!r}) are keyed: pass "
+            f"comp_key to run_round")
+    k_up = (jax.random.fold_in(comp_key, 0) if comp_key is not None
+            else None)
+
     x, c = server.x, server.c
+    # what the clients *receive*: the (optionally compressed) broadcast.
+    # dy is measured against the received x so the server-side apply of
+    # mean dy to the exact x matches real federated execution.
+    if down.name != "none":
+        x_cl, c_cl = down.apply_stateless(
+            spec, (x, c),
+            key=(jax.random.fold_in(comp_key, 1) if comp_key is not None
+                 else None))
+    else:
+        x_cl, c_cl = x, c
+
     c_i, weights = clients.c_i, clients.weights
     fn = partial(client_update, grad_fn, spec,
                  use_fused_update=use_fused_update,
@@ -153,27 +203,50 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
                 wnorm, a.astype(jnp.float32), axes=(0, 0)).astype(a.dtype),
             tree_stacked)
 
+    def _res0(dy_like):
+        """The carried residuals, or the codec's fresh ones (leaves match
+        the stacked per-client deltas); None for stateless codecs."""
+        if clients.uplink_residual is not None:
+            return clients.uplink_residual
+        return up.init_residual(dy_like)
+
     uplink_res_new = clients.uplink_residual
     if spec.strategy == "client_parallel":
-        if spec.compress_uplink:
-            dy, dc, c_i_new, losses, uplink_res_new = jax.vmap(
-                fn, in_axes=(None, None, 0, 0, 0))(x, c, c_i, batches,
-                                                   clients.uplink_residual)
-        else:
-            dy, dc, c_i_new, losses = jax.vmap(
-                fn, in_axes=(None, None, 0, 0))(x, c, c_i, batches)
+        dy, dc, c_i_new, losses = jax.vmap(
+            fn, in_axes=(None, None, 0, 0))(x_cl, c_cl, c_i, batches)
+        if up.name != "none":
+            res = _res0(dy)
+            if up.needs_key:
+                keys = jax.vmap(lambda i: jax.random.fold_in(k_up, i))(
+                    jnp.arange(spec.num_sampled))
+                dy, uplink_res_new = jax.vmap(
+                    lambda d, r, k: up.round_trip(spec, d, r, key=k))(
+                        dy, res, keys)
+            else:
+                dy, uplink_res_new = jax.vmap(
+                    lambda d, r: up.round_trip(spec, d, r))(dy, res)
         dy_mean = _wmean(dy)
         dc_mean = _wmean(dc)
         loss = jnp.mean(losses)
         drift = jnp.mean(jax.vmap(tree_norm)(dy))
     else:  # client_sequential
-        assert not spec.compress_uplink, (
-            "uplink compression is wired for client_parallel")
+        s = spec.num_sampled
+        w_seq = (wnorm if weights is not None
+                 else jnp.full((s,), 1.0 / s, jnp.float32))
+        compressing = up.name != "none"
 
         def scan_body(carry, inp):
             dy_acc, dc_acc, loss_acc = carry
-            ci_k, batch_k, w_k = inp
-            dy_k, dc_k, ci_new_k, loss_k = fn(x, c, ci_k, batch_k)
+            if compressing:
+                ci_k, batch_k, w_k, i_k, res_k = inp
+            else:
+                ci_k, batch_k, w_k = inp
+            dy_k, dc_k, ci_new_k, loss_k = fn(x_cl, c_cl, ci_k, batch_k)
+            if compressing:
+                key_k = (jax.random.fold_in(k_up, i_k) if up.needs_key
+                         else None)
+                dy_k, res_new_k = up.round_trip(spec, dy_k, res_k,
+                                                key=key_k)
             dy_acc = jax.tree.map(
                 lambda a, d: a + w_k * d.astype(a.dtype), dy_acc, dy_k)
             dc_acc = jax.tree.map(
@@ -182,21 +255,30 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
                 dy_acc = shard_fn(dy_acc)
                 dc_acc = shard_fn(dc_acc)
                 ci_new_k = shard_fn(ci_new_k)
-            return (dy_acc, dc_acc, loss_acc + loss_k), ci_new_k
+                if compressing and res_new_k is not None:
+                    res_new_k = shard_fn(res_new_k)
+            ys = (ci_new_k, res_new_k) if compressing else ci_new_k
+            return (dy_acc, dc_acc, loss_acc + loss_k), ys
 
-        s = spec.num_sampled
-        w_seq = (wnorm if weights is not None
-                 else jnp.full((s,), 1.0 / s, jnp.float32))
+        xs = (c_i, batches, w_seq)
+        if compressing:
+            xs += (jnp.arange(s, dtype=jnp.int32), _res0(c_i))
         zeros = tree_zeros_like(x)
-        (dy_mean, dc_mean, loss_sum), c_i_new = uscan(
-            scan_body, (zeros, tree_zeros_like(c), jnp.zeros((), jnp.float32)),
-            (c_i, batches, w_seq),
+        (dy_mean, dc_mean, loss_sum), ys = uscan(
+            scan_body,
+            (zeros, tree_zeros_like(c), jnp.zeros((), jnp.float32)), xs,
         )
+        if compressing:
+            c_i_new, uplink_res_new = ys
+        else:
+            c_i_new = ys
         loss = loss_sum / s
         drift = tree_norm(dy_mean)
 
     # server update (eq. 5 / alg. 1 line 16-17) through the registered
-    # server optimizer (sgd / heavy-ball momentum / FedAdam)
+    # server optimizer (sgd / heavy-ball momentum / FedAdam), applied to
+    # the server's *exact* x (the downlink codec only perturbs what the
+    # clients see)
     opt = get_server_optimizer(resolve_server_optimizer(spec))
     x_new, opt_state_new, applied = opt.apply(
         spec, server.opt_state, x, dy_mean)
@@ -205,6 +287,7 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
         "loss": loss,
         "drift": drift,
         "update_norm": tree_norm(applied),
+        **_bytes_metrics(spec, x, stateful_clients=algo.stateful_clients),
     }
     return RoundOutput(
         server=ServerState(x=x_new, c=c_new, opt_state=opt_state_new),
@@ -217,7 +300,8 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
 
 def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
                     weights=None, uplink_res=None,
-                    use_fused_update: bool = False, shard_fn=None):
+                    use_fused_update: bool = False, shard_fn=None,
+                    comp_key=None):
     """Back-compat shim over :func:`run_round` (the seed signature).
 
     x, c: param-like pytrees (server model / server control variate).
@@ -232,6 +316,7 @@ def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
     uplink_res: per-client error-feedback residuals (leaves (S, ...)) when
     spec.compress_uplink; the new residuals are returned in metrics-position
     order (x, c, c_i, [momentum], [uplink_res], metrics).
+    comp_key: per-round compression key (keyed codecs — see run_round).
     Returns (x_new, c_new, c_i_new, metrics).
     """
     opt_name = resolve_server_optimizer(spec)
@@ -251,6 +336,7 @@ def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
         ClientRoundState(c_i=c_i, uplink_residual=uplink_res,
                          weights=weights),
         batches, use_fused_update=use_fused_update, shard_fn=shard_fn,
+        comp_key=comp_key,
     )
     if whole_batch:
         return out.server.x, out.server.c, out.clients.c_i, out.metrics

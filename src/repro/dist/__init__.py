@@ -80,7 +80,11 @@ def partition_client_store(shapes, mesh, strategy):
     size divides N (DESIGN.md §10). The per-round gather of the S sampled
     rows then lands them on the same data groups that execute the round's
     vmap, and the scatter goes back shard-local — no store leaf is ever
-    replicated across data groups between rounds."""
+    replicated across data groups between rounds. The rules are leaf-wise,
+    so the compressed-uplink store ``{"c_i": ..., "residual": ...}``
+    (error-feedback residuals as ordinary (N, ...) fp32 rows —
+    DESIGN.md §11) shards identically to the bare control-variate
+    store."""
     return _to_sharding(
         _spec_tree(shapes, mesh, strategy, lead_dims=1, lead_axis="data"),
         mesh)

@@ -18,7 +18,12 @@ import numpy as np
 from repro.checkpoint import load_trainer, save_trainer
 from repro.configs import get_config, get_reduced
 from repro.configs.base import FedRoundSpec
-from repro.core import FederatedTrainer, algorithm_names, server_optimizer_names
+from repro.core import (
+    FederatedTrainer,
+    algorithm_names,
+    compressor_names,
+    server_optimizer_names,
+)
 from repro.data import SyntheticLMFederated
 from repro.models import model as M
 
@@ -59,6 +64,15 @@ def main(argv=None):
     ap.add_argument("--server-momentum", type=float, default=0.0)
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
+    ap.add_argument("--compress", default="none",
+                    choices=list(compressor_names()),
+                    help="uplink delta codec (error-feedback residuals "
+                         "ride the client store; DESIGN.md §11)")
+    ap.add_argument("--compress-k", type=int, default=32,
+                    help="kept coordinates per leaf for topk_ef/randk_ef")
+    ap.add_argument("--compress-downlink", default="none",
+                    choices=list(compressor_names()),
+                    help="codec for the server->client (x, c) broadcast")
     ap.add_argument("--pipeline-depth", type=int, default=0)
     ap.add_argument("--scan-rounds", type=int, default=0,
                     help="scanned-engine chunk size: run rounds on device "
@@ -92,6 +106,9 @@ def main(argv=None):
         server_optimizer=args.server_opt,
         server_momentum=args.server_momentum,
         weighted_aggregation=args.weighted,
+        compress=args.compress,
+        compress_k=args.compress_k,
+        compress_downlink=args.compress_downlink,
     )
     data = SyntheticLMFederated(args.clients, cfg.vocab_size, args.seq_len,
                                 heterogeneity=args.heterogeneity,
@@ -128,7 +145,9 @@ def main(argv=None):
         m = trainer.history[-1]
         ev = float(eval_loss(trainer.x, eval_batch))
         print(f"round {done:4d} loss={m['loss']:.4f} eval={ev:.4f} "
-              f"drift={m['drift']:.3e} ({time.time()-t0:.1f}s)")
+              f"drift={m['drift']:.3e} "
+              f"up={m['bytes_up']/1e6:.2f}MB down={m['bytes_down']/1e6:.2f}MB "
+              f"({time.time()-t0:.1f}s)")
     if args.checkpoint:
         save_trainer(args.checkpoint, trainer)
         print("checkpoint saved to", args.checkpoint)

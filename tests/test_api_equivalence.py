@@ -209,4 +209,5 @@ def test_typed_state_round_trip_through_jit_donation():
     out = fn(server, clients, batches)
     assert isinstance(out.server, ServerState)
     assert isinstance(out.clients, ClientRoundState)
-    assert set(out.metrics) == {"loss", "drift", "update_norm"}
+    assert set(out.metrics) == {"loss", "drift", "update_norm",
+                                "bytes_up", "bytes_down"}

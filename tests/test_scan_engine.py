@@ -73,28 +73,46 @@ def _assert_tree_equal(a, b):
 
 def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
     """R iterations of the host loop on the scanned engine's RNG contract:
-    per-round separately-jitted run_round, numpy store gather/scatter,
-    cohorts/data drawn from the same fold_in(key, t) streams."""
+    per-round separately-jitted run_round, numpy store gather/scatter
+    (incl. the uplink error-feedback residuals under an active codec),
+    cohorts/data/compression keys drawn from the same fold_in(key, t)
+    streams the trainer's scan uses (seed, seed+1, seed+2)."""
+    from repro.core import get_compressor, resolve_compressor
+    from repro.core.compression import resolve_downlink
+
     grad_fn = make_grad_fn(quadratic_loss)
     data = ds.device_data()
     bf = jax.jit(ds.device_batch_fn(spec.local_steps, spec.local_batch))
     skey, dkey = jax.random.key(seed), jax.random.key(seed + 1)
+    comp = get_compressor(resolve_compressor(spec))
+    keyed = (comp.needs_key
+             or get_compressor(resolve_downlink(spec)).needs_key)
+    ckey = jax.random.key(seed + 2) if keyed else None
     samp = jax.jit(partial(device_sample_ids, num_clients=spec.num_clients,
                            num_sampled=spec.num_sampled))
-    rj = jax.jit(lambda s, c, b: run_round(
-        grad_fn, spec, s, c, b, use_fused_update=use_fused_update))
+    rj = jax.jit(lambda s, c, b, k: run_round(
+        grad_fn, spec, s, c, b, use_fused_update=use_fused_update,
+        comp_key=k))
     server = init_server_state(spec, _init_params(None))
     store = np.zeros((spec.num_clients, DIM), np.float32)
+    res_store = (np.zeros((spec.num_clients, DIM), np.float32)
+                 if comp.stateful else None)
     hist = []
     for t in range(rounds):
         ids = np.asarray(samp(skey, t))
         batches = bf(data, jnp.asarray(ids), jax.random.fold_in(dkey, t))
-        clients = ClientRoundState(c_i={"x": jnp.asarray(store[ids])})
-        out = rj(server, clients, batches)
+        clients = ClientRoundState(
+            c_i={"x": jnp.asarray(store[ids])},
+            uplink_residual=({"x": jnp.asarray(res_store[ids])}
+                             if res_store is not None else None))
+        out = rj(server, clients, batches,
+                 jax.random.fold_in(ckey, t) if keyed else None)
         server = out.server
         store[ids] = np.asarray(out.clients.c_i["x"])
+        if res_store is not None:
+            res_store[ids] = np.asarray(out.clients.uplink_residual["x"])
         hist.append({k: float(v) for k, v in out.metrics.items()})
-    return server, store, hist
+    return server, store, hist, res_store
 
 
 @pytest.mark.parametrize("use_fused", [False, True],
@@ -111,7 +129,7 @@ def test_scanned_matches_host_loop(algo, server_opt, use_fused):
     ctx = (fused_ops.force_interpret() if use_fused
            else contextlib.nullcontext())
     with ctx:
-        server_h, store_h, hist_h = _host_loop_device_rng(
+        server_h, store_h, hist_h, _ = _host_loop_device_rng(
             spec, ds, ROUNDS, use_fused_update=use_fused)
         tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
                               scan_rounds=ROUNDS, use_fused_update=use_fused)
@@ -158,7 +176,7 @@ def test_run_rounds_direct_api():
         sample_key=jax.random.key(0), data_key=jax.random.key(1))
     assert metrics["loss"].shape == (5,)
     assert store2["x"].shape == (N, DIM)
-    server_h, store_h, hist_h = _host_loop_device_rng(spec, ds, 5)
+    server_h, store_h, hist_h, _ = _host_loop_device_rng(spec, ds, 5)
     _assert_tree_equal(server_h.x, server2.x)
     _assert_tree_equal({"x": store_h}, store2)
     np.testing.assert_array_equal(
@@ -233,13 +251,114 @@ def test_fallback_to_host_loop_warns_and_matches():
     _assert_tree_equal(ref.x, tr.x)
 
 
-def test_fallback_on_uplink_compression():
-    spec = _spec("scaffold", "sgd", compress_uplink=True)
-    with pytest.warns(UserWarning, match="host loop"):
-        tr = FederatedTrainer(quadratic_loss, _init_params, spec, _dataset(),
-                              seed=0, scan_rounds=4)
-    assert not tr.scan_active
-    tr.run_round()  # host loop still works
+# ---------------------------------------------------------------------------
+# compression axis (DESIGN.md §11): every registered codec runs the scanned
+# engine — residuals are device-store rows, not a host-loop fallback
+# ---------------------------------------------------------------------------
+
+CODECS = ("none", "int8_ef", "topk_ef", "randk_ef", "sign_ef")
+
+
+@pytest.mark.parametrize("algo", ["scaffold", "scaffold_m"])
+@pytest.mark.parametrize("codec", CODECS)
+def test_scanned_matches_host_loop_compressed(codec, algo):
+    """run_rounds(R) with an active uplink codec is bit-for-bit equal to R
+    host-loop rounds on the device RNG contract — server state, the c_i
+    store, the error-feedback residual store, and the per-round metrics
+    (incl. the bytes accounting)."""
+    spec = _spec(algo, "sgd", compress=codec, compress_k=3)
+    assert spec.compress_uplink == (codec != "none")
+    ds = _dataset()
+    server_h, store_h, hist_h, res_h = _host_loop_device_rng(
+        spec, ds, ROUNDS)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=ROUNDS)
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(ROUNDS)
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal(server_h.c, tr.c)
+    if codec == "none":
+        _assert_tree_equal({"x": store_h}, tr.device_store)
+    else:
+        # residuals live in the device store next to the control variates
+        _assert_tree_equal({"x": store_h}, tr.device_store["c_i"])
+        _assert_tree_equal({"x": res_h}, tr.device_store["residual"])
+        assert np.abs(res_h).sum() > 0, "codec never produced a residual"
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+@pytest.mark.parametrize("up,down", [("randk_ef", "int8_ef"),
+                                     ("int8_ef", "randk_ef")])
+def test_compressed_downlink_runs_scanned_and_matches_host_contract(up,
+                                                                    down):
+    """Compressed broadcast + compressed uplink (keyed codec on either
+    side): the fullest codec configs still run the scan and match the
+    host-driven contract."""
+    spec = _spec("scaffold", "momentum", compress=up, compress_k=2,
+                 compress_downlink=down)
+    ds = _dataset()
+    server_h, store_h, hist_h, res_h = _host_loop_device_rng(
+        spec, ds, ROUNDS)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=ROUNDS)
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(ROUNDS)
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal({"x": res_h}, tr.device_store["residual"])
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+    # downlink cut is visible in the accounting: codec pair < raw fp32 pair
+    raw_down = spec.num_sampled * 2 * DIM * 4
+    assert tr.history[-1]["bytes_down"] < raw_down
+
+
+@pytest.mark.parametrize("chunks", [(1,) * 6, (2, 4), (4, 2)])
+def test_chunk_size_invariance_compressed(chunks):
+    """Residuals carried through the scanned store survive any chunking:
+    6 rounds in one scan == the same 6 rounds in smaller chunks, bitwise,
+    for the keyed codec (the hardest case: its mask stream must be
+    stateless in the round index)."""
+    spec = _spec("scaffold", "momentum", compress="randk_ef", compress_k=2)
+    ds = _dataset()
+    ref = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                           scan_rounds=6)
+    ref.run(6)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=max(chunks))
+    for c in chunks:
+        tr._run_scan_chunk(c)
+    _assert_tree_equal(ref.x, tr.x)
+    _assert_tree_equal(ref.device_store, tr.device_store)
+    assert ref.history == tr.history
+
+
+def test_checkpoint_resume_mid_chunk_compressed(tmp_path):
+    """Mid-chunk checkpoint-resume with residuals in the device store:
+    save after 7 rounds (scan_rounds=5 runs 5+2), restore into a fresh
+    trainer, continue — bitwise equal to the unbroken 12-round run,
+    including the restored residual rows."""
+    spec = _spec("scaffold", "adam", compress="topk_ef", compress_k=2)
+    ds = _dataset()
+    unbroken = FederatedTrainer(quadratic_loss, _init_params, spec, ds,
+                                seed=0, scan_rounds=5)
+    unbroken.run(12)
+    a = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=5)
+    a.run(7)
+    path = str(tmp_path / "ck.npz")
+    save_trainer(path, a)
+    assert np.abs(np.asarray(
+        a.residual_store.gather(np.arange(N))["x"])).sum() > 0
+    b = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=5)
+    load_trainer(path, b)
+    assert b.round_idx == 7
+    _assert_tree_equal(a.device_store["residual"], b.device_store["residual"])
+    b.run(5)
+    _assert_tree_equal(unbroken.x, b.x)
+    _assert_tree_equal(unbroken.server.opt_state, b.server.opt_state)
+    _assert_tree_equal(unbroken.device_store, b.device_store)
 
 
 def test_scanned_emnist_weighted_matches_chunking():
@@ -297,7 +416,7 @@ def test_sgd_whole_batch_scans():
                           scan_rounds=3)
     assert tr.scan_active
     tr.run(3)
-    server_h, store_h, hist_h = _host_loop_device_rng(spec, ds, 3)
+    server_h, store_h, hist_h, _ = _host_loop_device_rng(spec, ds, 3)
     _assert_tree_equal(server_h.x, tr.x)
     np.testing.assert_array_equal(store_h,
                                   np.asarray(tr.device_store["x"]))
