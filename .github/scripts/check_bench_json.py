@@ -24,6 +24,15 @@ def check(path: str) -> None:
             assert record["mode"] in ROUND_MODES, record
             assert record["rounds_per_s"] > 0, record
             assert "kernel_launches_per_step_packed" in record, record
+    if payload["bench"] == "local_solver":
+        solvers = {record["solver"] for record in records}
+        assert "sgd" in solvers, solvers  # the paper-baseline row
+        for record in records:
+            assert record["solver"], record
+            # acceptance: every local solver rides the scanned engine
+            assert record["mode"] == "scanned", record
+            assert record["rounds_per_s"] > 0, record
+            assert isinstance(record["stateful"], bool), record
     if payload["bench"] == "compression":
         codecs = {record["codec"] for record in records}
         assert "none" in codecs, codecs  # the uncompressed baseline row

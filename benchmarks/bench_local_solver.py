@@ -1,0 +1,94 @@
+"""Local-solver sweep on the scanned engine (DESIGN.md §12).
+
+For every solver in the LocalSolver registry, runs ``FederatedTrainer``
+with ``scan_rounds=R`` (the on-device ``lax.scan`` engine — asserting no
+``scan_fallback_reason``: stateful solvers' per-client slots are
+device-store rows, never a host fallback) on the dispatch-bound
+quadratics workload and reports
+
+  rounds/s      wall-clock of the scanned chunk,
+  final_loss    the last round's training loss (the solvers genuinely
+                take different trajectories — a sanity signal that the
+                registry dispatch is live),
+  stateful      whether the solver persists per-client slots.
+
+Emits one ``scaffold-bench/v1`` record per solver —
+``python -m benchmarks.bench_local_solver`` writes
+``BENCH_local_solver.json`` (validated by
+.github/scripts/check_bench_json.py and uploaded by the CI bench job;
+``--smoke`` is the CI-speed preset).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_argparser, bench_cli
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer, get_local_solver, local_solver_names
+from repro.data import make_similarity_quadratics, quadratic_loss
+
+N, S, K, DIM = 20, 4, 10, 20
+
+
+def bench_solver(solver: str, *, iters: int, ds):
+    # heavy-ball momentum persisting across rounds compounds with the
+    # drift correction: temper beta and eta on this workload so the
+    # momentum row converges like the others (the bench times dispatch,
+    # but a diverging loss column would read as a correctness bug)
+    eta = 0.05 if solver == "momentum" else 0.1
+    spec = FedRoundSpec(
+        algorithm="scaffold", num_clients=N, num_sampled=S, local_steps=K,
+        local_batch=1, eta_l=eta, local_solver=solver, local_momentum=0.5,
+        eta_l_schedule="cosine" if solver == "sgd_sched" else "")
+    init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}  # noqa: E731
+    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0,
+                          scan_rounds=iters)
+    assert tr.scan_active, (solver, tr.scan_fallback_reason)
+    tr.run(iters)  # compile the R=iters chunk outside timing
+    t0 = time.perf_counter()
+    tr.run(iters)
+    jax.block_until_ready(tr.x)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    return {
+        "bench": "local_solver",
+        "solver": solver,
+        "stateful": bool(get_local_solver(solver).stateful),
+        "mode": "scanned",
+        "scan_chunk": iters,
+        "us_per_round": us,
+        "rounds_per_s": 1e6 / max(us, 1e-9),
+        "final_loss": tr.history[-1]["loss"],
+    }
+
+
+def run(*, iters: int = 64, seed: int = 0):
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=8.0, mu=0.3,
+                                    seed=seed)
+    rows = [bench_solver(s, iters=iters, ds=ds)
+            for s in local_solver_names()]
+    for r in rows:
+        print(f"local_solver_{r['solver']:10s}: "
+              f"{r['us_per_round']/1e3:7.2f} ms/round "
+              f"({r['rounds_per_s']:8.0f} rounds/s) | "
+              f"stateful={str(r['stateful']):5s} | "
+              f"loss {r['final_loss']:+.4f}")
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, iters: int = 64):
+    del fast  # scale rides on --iters/--smoke (no --full, like bench_round)
+    if smoke:
+        iters = min(iters, 16)
+    return run(iters=iters)
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed preset (clamps the scan chunk to 16)")
+    ap.add_argument("--iters", type=int, default=64,
+                    help="timed rounds (also the scan chunk size)")
+    bench_cli("local_solver", main, parser=ap, forward=("smoke", "iters"))

@@ -1,7 +1,7 @@
 """Checkpointing: the full typed trainer state — ``ServerState`` (x, c,
 server-optimizer slots), the per-client host stores (control variates +
-uplink error-feedback residuals), and the host RNGs (sampler + data) —
-as flat .npz archives (offline-friendly).
+uplink error-feedback residuals + stateful local-solver slots), and the
+host RNGs (sampler + data) — as flat .npz archives (offline-friendly).
 
 Pytree structure is recorded as the sorted flattened key-paths so restore
 round-trips arbitrary nested dicts/lists of arrays. The host RNG states
@@ -71,6 +71,8 @@ def _trainer_tree(trainer) -> Dict[str, Any]:
     }
     if trainer.residual_store is not None:
         tree["residuals"] = trainer.residual_store.gather(all_ids)
+    if trainer.solver_store is not None:
+        tree["solver_slots"] = trainer.solver_store.gather(all_ids)
     return tree
 
 
@@ -100,6 +102,8 @@ def load_trainer(path: str, trainer):
     trainer.store.scatter(all_ids, tree["store"])
     if trainer.residual_store is not None:
         trainer.residual_store.scatter(all_ids, tree["residuals"])
+    if trainer.solver_store is not None:
+        trainer.solver_store.scatter(all_ids, tree["solver_slots"])
     trainer.push_host_store_to_device()
     trainer.round_idx = int(extra.get("round", 0))
     if "host_rng" in extra:

@@ -196,6 +196,22 @@ class FedRoundSpec:
     # paper §2 "weighted case": aggregate client deltas weighted by their
     # dataset sizes instead of uniformly
     weighted_aggregation: bool = False
+    # beyond-paper: the client's inner optimizer, a name in the
+    # repro.core.local_solver registry (sgd | momentum | adam |
+    # sgd_sched). "sgd" (also resolved from "") is the paper's plain
+    # corrected step, bit-for-bit the pre-registry path. Stateful
+    # solvers (momentum/adam) persist per-client slots in the client
+    # store next to c_i (DESIGN.md §12).
+    local_solver: str = "sgd"
+    # heavy-ball beta of the "momentum" local solver / beta1 of "adam"
+    local_momentum: float = 0.9
+    # second-moment decay of the "adam" local solver
+    local_beta2: float = 0.99
+    # per-local-step eta_l schedule of the "sgd_sched" solver
+    # (repro.optim.schedules: constant | warmup | cosine); must stay ""
+    # for every other solver (rejected loudly, like the whole-batch
+    # combinations below)
+    eta_l_schedule: str = ""
 
     def __post_init__(self, compress_uplink):
         # lazy import: the registries live above configs in the layering
@@ -206,11 +222,28 @@ class FedRoundSpec:
         )
 
         from repro.core.compression import compressor_names
+        from repro.core.local_solver import local_solver_names
+        from repro.optim.schedules import schedule_names
 
         assert self.algorithm in algorithm_names(), (
             self.algorithm, algorithm_names())
         assert self.server_optimizer in ("",) + server_optimizer_names(), (
             self.server_optimizer, server_optimizer_names())
+        if self.local_solver == "":
+            object.__setattr__(self, "local_solver", "sgd")
+        assert self.local_solver in local_solver_names(), (
+            self.local_solver, local_solver_names())
+        assert 0.0 <= self.local_momentum < 1.0, self.local_momentum
+        assert 0.0 <= self.local_beta2 < 1.0, self.local_beta2
+        if self.local_solver == "sgd_sched":
+            assert self.eta_l_schedule in schedule_names(), (
+                f"local_solver='sgd_sched' needs eta_l_schedule in "
+                f"{schedule_names()}, got {self.eta_l_schedule!r}")
+        else:
+            assert self.eta_l_schedule == "", (
+                f"eta_l_schedule={self.eta_l_schedule!r} has no effect for "
+                f"local_solver={self.local_solver!r}; use "
+                f"local_solver='sgd_sched'")
         if self.compress == "":
             # only an *explicit* bool resolves "" to the legacy codec; a
             # carried _CompressUplinkMirror (replace(spec, compress=""))
@@ -261,6 +294,11 @@ class FedRoundSpec:
             assert self.compress_downlink == "none", (
                 f"compress_downlink has no effect for whole-batch "
                 f"{self.algorithm!r}")
+            # no local steps at all: a non-trivial local solver (incl.
+            # every stateful one) would silently never run
+            assert self.local_solver == "sgd", (
+                f"local_solver={self.local_solver!r} has no effect for "
+                f"whole-batch {self.algorithm!r}")
         assert self.scaffold_option in ("I", "II")
         assert self.strategy in ("client_parallel", "client_sequential")
         assert self.num_sampled <= self.num_clients

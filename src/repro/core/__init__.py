@@ -11,13 +11,21 @@ Entry points:
   FederatedTrainer — host controller (sampling + stateful-client stores;
                      sync / pipelined / scanned execution modes)
 
-Extensibility (DESIGN.md §9/§11):
+Extensibility (DESIGN.md §9/§11/§12) — four registries, each listable
+(``algorithm_names`` / ``server_optimizer_names`` / ``compressor_names``
+/ ``local_solver_names``; ``launch/train.py --list-registries`` prints
+all four):
   Algorithm / register_algorithm            — per-round algorithm strategy
   ServerOptimizer / register_server_optimizer — server step on the
                                               aggregated delta
   Compressor / register_compressor          — uplink/downlink codec with a
                                               scan-carryable error-feedback
                                               residual
+  LocalSolver / register_local_solver       — the client's inner optimizer
+                                              (explicit scan-carryable slot
+                                              pytree; stateful solvers
+                                              persist per-client slots in
+                                              the client store)
 """
 from repro.core.api import (  # noqa: F401
     Algorithm,
@@ -48,7 +56,15 @@ from repro.core.controller import (  # noqa: F401
     FederatedTrainer,
     make_grad_fn,
 )
-from repro.core.local_solver import local_sgd  # noqa: F401
+from repro.core.local_solver import (  # noqa: F401
+    LocalSolver,
+    get_local_solver,
+    local_sgd,
+    local_solver_names,
+    register_local_solver,
+    resolve_local_solver,
+    run_local_steps,
+)
 from repro.core.rounds import (  # noqa: F401
     client_update,
     federated_round,

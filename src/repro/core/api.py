@@ -74,7 +74,8 @@ class ServerState:
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=["c_i", "uplink_residual", "weights"], meta_fields=[])
+         data_fields=["c_i", "uplink_residual", "weights", "solver_slots"],
+         meta_fields=[])
 @dataclasses.dataclass
 class ClientRoundState:
     """Round-scoped state of the S sampled clients.
@@ -86,11 +87,16 @@ class ClientRoundState:
     weights:         optional ``(S,)`` aggregation weights (paper §2
                      weighted case, e.g. client dataset sizes);
                      normalised inside the round.
+    solver_slots:    per-client local-solver slots when the spec's
+                     ``local_solver`` is stateful (momentum/adam —
+                     leaves ``(S, ...)``, DESIGN.md §12), else None
+                     (``run_round`` then starts from ``solver.init``).
     """
 
     c_i: Any
     uplink_residual: Any = None
     weights: Optional[jnp.ndarray] = None
+    solver_slots: Any = None
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -415,10 +421,14 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
                   leading axis over "data" via
                   ``dist.partition_client_store`` on a multi-device mesh).
                   With an active uplink codec (``spec.compress_uplink``)
-                  this is the dict ``{"c_i": <x-like tree>, "residual":
-                  <fp32 x-like tree>}`` — the error-feedback residuals
-                  are ordinary store rows, gathered/scattered inside the
-                  scan exactly like the control variates (DESIGN.md §11).
+                  and/or a stateful local solver (``spec.local_solver``
+                  in {momentum, adam}) this is a dict with the row
+                  families the config carries — ``{"c_i": <x-like
+                  tree>[, "residual": <fp32 x-like tree>][, "solver":
+                  <slot tree>]}`` — error-feedback residuals and
+                  local-solver slots are ordinary store rows,
+                  gathered/scattered inside the scan exactly like the
+                  control variates (DESIGN.md §11/§12).
     R:            trip count (python int — static under jit).
     data:         dataset device arrays (``dataset.device_data()``).
     batch_fn:     pure ``(data, ids, key) -> batches`` with leaves
@@ -444,22 +454,32 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
 
     Returns ``(server, client_store, metrics)`` with metrics leaves
     stacked ``(R,)`` and ``client_store`` in the input structure
-    (residuals included when compressing).
+    (residuals / solver slots included when carried).
     """
     # lazy imports: rounds.py imports this module at top level
     from repro.core.compression import get_compressor, resolve_compressor
+    from repro.core.local_solver import get_local_solver, resolve_local_solver
     from repro.core.rounds import run_round
     from repro.core.sampling import device_sample_ids
     from repro.core.tree import tree_gather, tree_scatter
 
     up = get_compressor(resolve_compressor(spec))
+    solver = get_local_solver(resolve_local_solver(spec))
     carry_residuals = up.stateful
-    if carry_residuals:
+    carry_slots = solver.stateful
+    wrapped = carry_residuals or carry_slots
+    if wrapped:
+        need = {"c_i"}
+        if carry_residuals:
+            need.add("residual")
+        if carry_slots:
+            need.add("solver")
         assert (isinstance(client_store, dict)
-                and {"c_i", "residual"} <= set(client_store)), (
-            f"uplink codec {up.name!r} carries error-feedback residuals: "
-            f"pass client_store as {{'c_i': ..., 'residual': ...}} with "
-            f"(N, ...) leaves")
+                and need <= set(client_store)), (
+            f"this config carries per-client rows beyond c_i (uplink codec "
+            f"{up.name!r} stateful={carry_residuals}, local solver "
+            f"{solver.name!r} stateful={carry_slots}): pass client_store "
+            f"as a dict with keys {sorted(need)} and (N, ...) leaves")
 
     def body(carry, t):
         server, store = carry
@@ -468,9 +488,10 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
         batches = batch_fn(data, ids, jax.random.fold_in(data_key, t))
         gathered = tree_gather(store, ids)
         clients = ClientRoundState(
-            c_i=gathered["c_i"] if carry_residuals else gathered,
+            c_i=gathered["c_i"] if wrapped else gathered,
             uplink_residual=(gathered["residual"] if carry_residuals
                              else None),
+            solver_slots=gathered["solver"] if carry_slots else None,
             weights=(sizes[ids].astype(jnp.float32)
                      if sizes is not None else None),
         )
@@ -478,9 +499,14 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
                         use_fused_update=use_fused_update, shard_fn=shard_fn,
                         comp_key=(jax.random.fold_in(comp_key, t)
                                   if comp_key is not None else None))
-        new_rows = (
-            {"c_i": out.clients.c_i, "residual": out.clients.uplink_residual}
-            if carry_residuals else out.clients.c_i)
+        if wrapped:
+            new_rows = {"c_i": out.clients.c_i}
+            if carry_residuals:
+                new_rows["residual"] = out.clients.uplink_residual
+            if carry_slots:
+                new_rows["solver"] = out.clients.solver_slots
+        else:
+            new_rows = out.clients.c_i
         store = tree_scatter(store, ids, new_rows)
         return (out.server, store), out.metrics
 

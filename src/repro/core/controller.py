@@ -5,8 +5,10 @@ Owns:
   * the *full* N-client host stores (numpy, one slot per client — the
     paper's "stateful clients"): control variates, plus uplink
     error-feedback residuals when an uplink codec is active
-    (``spec.compress`` — DESIGN.md §11; in scan mode both live in the
-    device-resident store and the host pair is a checkpoint mirror),
+    (``spec.compress`` — DESIGN.md §11), plus local-solver slots when
+    the spec's ``local_solver`` is stateful (momentum/adam —
+    DESIGN.md §12; in scan mode all of these live in the
+    device-resident store and the host stores are checkpoint mirrors),
   * the sampler and the per-round gather/scatter of sampled clients'
     round state (``ClientRoundState``),
   * the jitted typed round function (``core/rounds.run_round``).
@@ -64,6 +66,7 @@ from repro.core.compression import (
     resolve_downlink,
     round_comm_bytes,
 )
+from repro.core.local_solver import get_local_solver, resolve_local_solver
 from repro.core.rounds import run_round
 from repro.core.sampling import (
     ClientSampler,
@@ -122,13 +125,15 @@ def _refresh_rows(prefetched, fresh, stale: np.ndarray) -> None:
 
 class _RoundInputs(NamedTuple):
     """Host-prepared inputs of one round: sampled ids, their gathered c_i
-    and residuals (numpy, mutable — stale rows are re-gathered in place),
-    weights, data batches, and the host-RNG states *before* this round
-    was prepared (what a checkpoint must record to re-prepare it)."""
+    / residuals / local-solver slots (numpy, mutable — stale rows are
+    re-gathered in place), weights, data batches, and the host-RNG
+    states *before* this round was prepared (what a checkpoint must
+    record to re-prepare it)."""
 
     ids: np.ndarray
     c_i: Any
     uplink_res: Any
+    solver_slots: Any
     weights: Optional[np.ndarray]
     batches: Any
     host_state: Dict[str, Any]
@@ -176,6 +181,15 @@ class FederatedTrainer:
             ClientStateStore(tree_cast(self.server.x, jnp.float32),
                              spec.num_clients)
             if self.compressor.stateful else None)
+        # stateful local solvers (momentum/adam) persist per-client slots
+        # across rounds, exactly like the control variates / residuals:
+        # one (N, ...) host store row family, mirrored into the device
+        # store under the scanned engine (DESIGN.md §12)
+        self.local_solver = get_local_solver(resolve_local_solver(spec))
+        self.solver_store = (
+            ClientStateStore(self.local_solver.init(spec, self.server.x),
+                             spec.num_clients)
+            if self.local_solver.stateful else None)
         self.sampler = ClientSampler(spec.num_clients, spec.num_sampled, seed)
         self._rng = np.random.default_rng(seed + 1)
         # compression stream: stateless in the round index like the scan's
@@ -232,23 +246,25 @@ class FederatedTrainer:
                 jnp.asarray(dataset.device_client_sizes())
                 if spec.weighted_aggregation else None)
             # full (N, ...) client store, device-resident between chunks;
-            # with an active uplink codec the error-feedback residuals are
-            # ordinary store rows riding next to the control variates. The
-            # host self.store / self.residual_store pair is a lazily-synced
-            # mirror that only checkpointing reads
-            c_store = jax.tree.map(
-                lambda a: jnp.zeros((spec.num_clients,) + a.shape,
-                                    jnp.asarray(a).dtype),
-                self.server.x)
-            if self.compressor.stateful:
-                self.device_store = {
-                    "c_i": c_store,
-                    "residual": jax.tree.map(
-                        lambda a: jnp.zeros(
-                            (spec.num_clients,) + jnp.asarray(a).shape,
-                            jnp.float32),
-                        self.server.x),
-                }
+            # with an active uplink codec / stateful local solver the
+            # error-feedback residuals / solver slots are ordinary store
+            # rows riding next to the control variates. The host
+            # self.store / self.residual_store / self.solver_store
+            # mirrors are lazily synced and only checkpointing reads them
+            rows = lambda tmpl: jax.tree.map(  # noqa: E731
+                lambda a: jnp.zeros(
+                    (spec.num_clients,) + jnp.asarray(a).shape,
+                    jnp.asarray(a).dtype),
+                tmpl)
+            c_store = rows(self.server.x)
+            if self.compressor.stateful or self.local_solver.stateful:
+                self.device_store = {"c_i": c_store}
+                if self.compressor.stateful:
+                    self.device_store["residual"] = rows(
+                        tree_cast(self.server.x, jnp.float32))
+                if self.local_solver.stateful:
+                    self.device_store["solver"] = rows(
+                        self.local_solver.init(spec, self.server.x))
             else:
                 self.device_store = c_store
             self._host_store_dirty = False
@@ -356,14 +372,16 @@ class FederatedTrainer:
         c_i = self.store.gather(ids)
         uplink_res = (self.residual_store.gather(ids)
                       if self.residual_store is not None else None)
+        solver_slots = (self.solver_store.gather(ids)
+                        if self.solver_store is not None else None)
         weights = None
         if self.spec.weighted_aggregation:
             weights = np.asarray(self.dataset.client_sizes(ids), np.float32)
         batches = self.dataset.round_batches(
             ids, self.spec.local_steps, self.spec.local_batch, self._rng
         )
-        return _RoundInputs(ids, c_i, uplink_res, weights, batches,
-                            host_state)
+        return _RoundInputs(ids, c_i, uplink_res, solver_slots, weights,
+                            batches, host_state)
 
     def _refresh_stale_rows(self, inputs: _RoundInputs,
                             ids_written: np.ndarray) -> None:
@@ -378,6 +396,9 @@ class FederatedTrainer:
         if self.residual_store is not None:
             _refresh_rows(inputs.uplink_res,
                           self.residual_store.gather(stale_ids), stale)
+        if self.solver_store is not None:
+            _refresh_rows(inputs.solver_slots,
+                          self.solver_store.gather(stale_ids), stale)
 
     def _dispatch(self, inp: _RoundInputs):
         """Launch the jitted round (async dispatch — returns futures).
@@ -386,6 +407,7 @@ class FederatedTrainer:
         clients = ClientRoundState(
             c_i=inp.c_i,
             uplink_residual=inp.uplink_res,
+            solver_slots=inp.solver_slots,
             weights=(jnp.asarray(inp.weights)
                      if inp.weights is not None else None),
         )
@@ -404,15 +426,19 @@ class FederatedTrainer:
 
     def sync_host_store(self) -> None:
         """Mirror the device-resident client store (control variates +
-        uplink residuals when compressing) into the host stores.
-        Checkpointing reads the host stores; no-op outside scan mode or
-        when the mirror is current."""
+        uplink residuals when compressing + solver slots for stateful
+        local solvers) into the host stores. Checkpointing reads the
+        host stores; no-op outside scan mode or when the mirror is
+        current."""
         if self._scan_mode and self._host_store_dirty:
             all_ids = np.arange(self.spec.num_clients)
             dev = jax.tree.map(np.asarray, self.device_store)
-            if self.residual_store is not None:
+            if self.residual_store is not None or self.solver_store is not None:
                 self.store.scatter(all_ids, dev["c_i"])
-                self.residual_store.scatter(all_ids, dev["residual"])
+                if self.residual_store is not None:
+                    self.residual_store.scatter(all_ids, dev["residual"])
+                if self.solver_store is not None:
+                    self.solver_store.scatter(all_ids, dev["solver"])
             else:
                 self.store.scatter(all_ids, dev)
             self._host_store_dirty = False
@@ -423,12 +449,14 @@ class FederatedTrainer:
         if self._scan_mode:
             all_ids = np.arange(self.spec.num_clients)
             c_store = jax.tree.map(jnp.asarray, self.store.gather(all_ids))
-            if self.residual_store is not None:
-                self.device_store = {
-                    "c_i": c_store,
-                    "residual": jax.tree.map(
-                        jnp.asarray, self.residual_store.gather(all_ids)),
-                }
+            if self.residual_store is not None or self.solver_store is not None:
+                self.device_store = {"c_i": c_store}
+                if self.residual_store is not None:
+                    self.device_store["residual"] = jax.tree.map(
+                        jnp.asarray, self.residual_store.gather(all_ids))
+                if self.solver_store is not None:
+                    self.device_store["solver"] = jax.tree.map(
+                        jnp.asarray, self.solver_store.gather(all_ids))
             else:
                 self.device_store = c_store
             self._host_store_dirty = False
@@ -481,6 +509,9 @@ class FederatedTrainer:
             scattered = True
         if self.residual_store is not None:
             self.residual_store.scatter(inp.ids, clients_new.uplink_residual)
+            scattered = True
+        if self.solver_store is not None:
+            self.solver_store.scatter(inp.ids, clients_new.solver_slots)
             scattered = True
         if scattered:
             for pending in self._prefetch:

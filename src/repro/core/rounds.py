@@ -31,6 +31,13 @@ Two execution strategies with identical algorithm semantics (tested):
   client_sequential lax.scan over the S clients (FSDP-style for models
                     whose state cannot fit one model-parallel group).
 
+The client's inner optimizer is the spec's registered ``LocalSolver``
+(``core/local_solver.py``, DESIGN.md §12) — both strategies thread its
+slot pytree through the local steps, and for stateful solvers
+(momentum/adam) the per-client slots ride ``ClientRoundState.
+solver_slots`` in and out of the round exactly like the control
+variates.
+
 Communication compression (DESIGN.md §11) lives at this level, shared by
 both strategies: the uplink codec (``spec.compress``, from the
 ``Compressor`` registry) round-trips each client's dy with its carried
@@ -61,7 +68,11 @@ from repro.core.compression import (
     resolve_downlink,
     round_comm_bytes,
 )
-from repro.core.local_solver import local_sgd
+from repro.core.local_solver import (
+    get_local_solver,
+    resolve_local_solver,
+    run_local_steps,
+)
 from repro.util import uscan
 from repro.core.tree import (
     tree_mean_leading,
@@ -76,12 +87,16 @@ def _merge_step_batches(batches):
     return jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), batches)
 
 
-def client_update(grad_fn, spec, x, c, c_i, batches,
+def client_update(grad_fn, spec, x, c, c_i, batches, solver_slots=None,
                   use_fused_update: bool = False, shard_fn=None):
     """Local work of one sampled client.
 
-    batches: pytree with leaves (K, b, ...). Returns (dy, dc, c_i_new, loss)
-    — dy = y_K - x (model delta), dc = c_i_new - c_i (control delta).
+    batches: pytree with leaves (K, b, ...). Returns
+    (dy, dc, c_i_new, solver_slots_new, loss) — dy = y_K - x (model
+    delta), dc = c_i_new - c_i (control delta), solver_slots_new the
+    local solver's slots after the K steps (``{}`` for slot-free
+    solvers; ``run_round`` persists them only for stateful solvers).
+    ``solver_slots=None`` starts from ``solver.init`` (fresh client).
     ``x`` / ``c`` are whatever the client *received* (the downlink-
     compressed broadcast when ``spec.compress_downlink``); uplink
     compression of dy happens at the ``run_round`` level, shared by both
@@ -92,9 +107,10 @@ def client_update(grad_fn, spec, x, c, c_i, batches,
     prox_mu = algo.prox_mu(spec)
     prox_center = x if prox_mu else None
 
-    y, loss = local_sgd(
-        grad_fn, x, batches, spec.eta_l,
-        correction=correction, prox_mu=prox_mu, prox_center=prox_center,
+    y, slots_new, loss = run_local_steps(
+        grad_fn, spec, x, batches,
+        slots=solver_slots, correction=correction,
+        prox_mu=prox_mu, prox_center=prox_center,
         use_fused_update=use_fused_update, shard_fn=shard_fn,
     )
     dy = tree_sub(y, x)
@@ -103,7 +119,7 @@ def client_update(grad_fn, spec, x, c, c_i, batches,
         spec, x, y, c, c_i,
         lambda: grad_fn(x, _merge_step_batches(batches))[0],
     )
-    return dy, dc, c_i_new, loss
+    return dy, dc, c_i_new, slots_new, loss
 
 
 def _whole_batch_round(grad_fn, spec, server, clients, batches) -> RoundOutput:
@@ -147,9 +163,11 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
 
     server:   ``ServerState`` (x, c, server-optimizer slots).
     clients:  ``ClientRoundState`` — c_i / uplink error-feedback
-              residuals with leaves (S, ...), optional (S,) aggregation
-              weights. A None ``uplink_residual`` under an active codec
-              starts from zeros.
+              residuals / local-solver slots with leaves (S, ...),
+              optional (S,) aggregation weights. A None
+              ``uplink_residual`` under an active codec starts from
+              zeros; a None ``solver_slots`` under a stateful local
+              solver starts from ``solver.init`` (also zeros).
     batches:  pytree with leaves (S, K, b, ...).
     comp_key: PRNG key of this round's compression stream (derive as
               ``fold_in(base, t)`` — stateless in the round index, like
@@ -186,6 +204,15 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
         x_cl, c_cl = x, c
 
     c_i, weights = clients.c_i, clients.weights
+    # stateful local solvers (momentum/adam) carry per-client slots —
+    # None means every sampled client starts from solver.init (zeros,
+    # matching the zero-filled store rows of never-sampled clients)
+    solver = get_local_solver(resolve_local_solver(spec))
+    slots_in = clients.solver_slots
+    if solver.stateful and slots_in is None:
+        slots_in = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (spec.num_sampled,) + a.shape),
+            solver.init(spec, x))
     fn = partial(client_update, grad_fn, spec,
                  use_fused_update=use_fused_update,
                  shard_fn=shard_fn if spec.strategy == "client_sequential"
@@ -212,8 +239,9 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
 
     uplink_res_new = clients.uplink_residual
     if spec.strategy == "client_parallel":
-        dy, dc, c_i_new, losses = jax.vmap(
-            fn, in_axes=(None, None, 0, 0))(x_cl, c_cl, c_i, batches)
+        dy, dc, c_i_new, slots_new, losses = jax.vmap(
+            fn, in_axes=(None, None, 0, 0, 0 if solver.stateful else None)
+        )(x_cl, c_cl, c_i, batches, slots_in)
         if up.name != "none":
             res = _res0(dy)
             if up.needs_key:
@@ -237,15 +265,14 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
 
         def scan_body(carry, inp):
             dy_acc, dc_acc, loss_acc = carry
+            ci_k, batch_k, w_k = inp["c_i"], inp["batch"], inp["w"]
+            slots_k = inp["slots"] if solver.stateful else None
+            dy_k, dc_k, ci_new_k, slots_new_k, loss_k = fn(
+                x_cl, c_cl, ci_k, batch_k, slots_k)
             if compressing:
-                ci_k, batch_k, w_k, i_k, res_k = inp
-            else:
-                ci_k, batch_k, w_k = inp
-            dy_k, dc_k, ci_new_k, loss_k = fn(x_cl, c_cl, ci_k, batch_k)
-            if compressing:
-                key_k = (jax.random.fold_in(k_up, i_k) if up.needs_key
+                key_k = (jax.random.fold_in(k_up, inp["i"]) if up.needs_key
                          else None)
-                dy_k, res_new_k = up.round_trip(spec, dy_k, res_k,
+                dy_k, res_new_k = up.round_trip(spec, dy_k, inp["res"],
                                                 key=key_k)
             dy_acc = jax.tree.map(
                 lambda a, d: a + w_k * d.astype(a.dtype), dy_acc, dy_k)
@@ -257,21 +284,32 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
                 ci_new_k = shard_fn(ci_new_k)
                 if compressing and res_new_k is not None:
                     res_new_k = shard_fn(res_new_k)
-            ys = (ci_new_k, res_new_k) if compressing else ci_new_k
+                if solver.stateful:
+                    # shard_fn is the param-tree constraint; slots nest
+                    # param trees under slot keys, so pin per entry
+                    slots_new_k = solver.shard_slots(shard_fn, slots_new_k)
+            ys = {"c_i": ci_new_k}
+            if compressing:
+                ys["res"] = res_new_k
+            if solver.stateful:
+                ys["slots"] = slots_new_k
             return (dy_acc, dc_acc, loss_acc + loss_k), ys
 
-        xs = (c_i, batches, w_seq)
+        xs = {"c_i": c_i, "batch": batches, "w": w_seq}
         if compressing:
-            xs += (jnp.arange(s, dtype=jnp.int32), _res0(c_i))
+            xs["i"] = jnp.arange(s, dtype=jnp.int32)
+            xs["res"] = _res0(c_i)
+        if solver.stateful:
+            xs["slots"] = slots_in
         zeros = tree_zeros_like(x)
         (dy_mean, dc_mean, loss_sum), ys = uscan(
             scan_body,
             (zeros, tree_zeros_like(c), jnp.zeros((), jnp.float32)), xs,
         )
+        c_i_new = ys["c_i"]
         if compressing:
-            c_i_new, uplink_res_new = ys
-        else:
-            c_i_new = ys
+            uplink_res_new = ys["res"]
+        slots_new = ys.get("slots")
         loss = loss_sum / s
         drift = tree_norm(dy_mean)
 
@@ -293,7 +331,9 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
         server=ServerState(x=x_new, c=c_new, opt_state=opt_state_new),
         clients=ClientRoundState(c_i=c_i_new,
                                  uplink_residual=uplink_res_new,
-                                 weights=weights),
+                                 weights=weights,
+                                 solver_slots=(slots_new if solver.stateful
+                                               else None)),
         metrics=metrics,
     )
 
@@ -323,6 +363,11 @@ def federated_round(grad_fn, spec, x, c, c_i, batches, momentum=None,
     assert opt_name in ("sgd", "momentum"), (
         f"the tuple-shim only carries sgd/momentum server state; use "
         f"run_round + ServerState for {opt_name!r}")
+    solver_name = resolve_local_solver(spec)
+    assert not get_local_solver(solver_name).stateful, (
+        f"the tuple-shim cannot carry the per-client slots of stateful "
+        f"local solver {solver_name!r} (they would silently reset every "
+        f"call); use run_round + ClientRoundState.solver_slots")
     whole_batch = get_algorithm(spec.algorithm).whole_batch
     if opt_name == "momentum" and not whole_batch:
         # also covers the momentum-default algorithms (scaffold_m/fedavgm):

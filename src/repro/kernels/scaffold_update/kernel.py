@@ -1,12 +1,23 @@
-"""Pallas TPU kernel: fused SCAFFOLD corrected local update.
+"""Pallas TPU kernels: fused SCAFFOLD corrected local updates.
+
+The plain corrected step (the ``sgd`` local solver),
 
     y' = y - eta * (g + corr)        with corr = c - c_i
 
-Four param-sized HBM buffers touched once each (3 reads + 1 write) in a
+touches four param-sized HBM buffers once each (3 reads + 1 write) in a
 single pass; unfused, the three elementwise ops cost up to 8 HBM round
 trips when XLA fails to fuse across the lax.scan step boundary of the
-local-step loop. Tiled (BLOCK_ROWS, 128) VMEM blocks — the last dim matches
-the TPU lane width, BLOCK_ROWS a multiple of the 8-row sublane tile.
+local-step loop. The heavy-ball variant (the ``momentum`` local solver,
+DESIGN.md §12),
+
+    m' = beta * m + (g + corr);   y' = y - eta * m'
+
+fuses the moment update into the same single pass (4 reads + 2 writes —
+still one kernel launch where the unfused expression would round-trip
+the param-sized ``m`` separately). Both are tiled (BLOCK_ROWS, 128) VMEM
+blocks — the last dim matches the TPU lane width, BLOCK_ROWS a multiple
+of the 8-row sublane tile — and accumulate in fp32 regardless of the
+operand dtypes.
 
 Callers (ops.py) present either one padded leaf or a whole packed dtype
 group as the (rows, 128) operand, so this grid also amortises kernel
@@ -46,3 +57,32 @@ def scaffold_update_2d(y, g, corr, eta: float, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
         interpret=interpret,
     )(y, g, corr)
+
+
+def _momentum_kernel(eta: float, beta: float, y_ref, g_ref, corr_ref, m_ref,
+                     y_out, m_out):
+    g = g_ref[...].astype(jnp.float32)
+    corr = corr_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    m_new = beta * m + (g + corr)
+    y_out[...] = (y_ref[...].astype(jnp.float32) - eta * m_new).astype(
+        y_out.dtype)
+    m_out[...] = m_new.astype(m_out.dtype)
+
+
+def scaffold_momentum_update_2d(y, g, corr, m, eta: float, beta: float, *,
+                                interpret: bool = False):
+    """Heavy-ball pallas_call on (rows, 128) views; returns (y', m')."""
+    rows = y.shape[0]
+    assert y.shape[1] == LANES and rows % BLOCK_ROWS == 0, y.shape
+    grid = (rows // BLOCK_ROWS,)
+    spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_momentum_kernel, eta, beta),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(y.shape, y.dtype),
+                   jax.ShapeDtypeStruct(m.shape, m.dtype)),
+        interpret=interpret,
+    )(y, g, corr, m)

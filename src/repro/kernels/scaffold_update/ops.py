@@ -1,18 +1,28 @@
-"""jit'd wrappers: arbitrary-shape fused SCAFFOLD update.
+"""jit'd wrappers: arbitrary-shape fused SCAFFOLD updates.
 
-Two entry points over the same Pallas kernel (kernel.py):
+Entry points over the Pallas kernels (kernel.py):
 
-  scaffold_update         single leaf — flattens one array to a padded
-                          (rows, 128) view and runs one ``pallas_call``.
-  scaffold_update_packed  whole parameter pytree — concatenates every leaf
-                          of a dtype group into ONE padded (rows, 128)
-                          buffer so a K-step local loop issues one
-                          ``pallas_call`` per dtype group per step instead
-                          of one per leaf (DESIGN.md §8). Leaf offsets are
-                          static, so slicing the results back out is free.
+  scaffold_update                  single leaf — flattens one array to a
+                                   padded (rows, 128) view and runs one
+                                   ``pallas_call``.
+  scaffold_update_packed           whole parameter pytree — concatenates
+                                   every leaf of a dtype group into ONE
+                                   padded (rows, 128) buffer so a K-step
+                                   local loop issues one ``pallas_call``
+                                   per dtype group per step instead of
+                                   one per leaf (DESIGN.md §8). Leaf
+                                   offsets are static, so slicing the
+                                   results back out is free.
+  scaffold_momentum_update         single-leaf heavy-ball variant (the
+                                   ``momentum`` local solver): returns
+                                   (y', m') from one kernel pass.
+  scaffold_momentum_update_packed  packed heavy-ball: same dtype-group
+                                   packing, 4 inputs / 2 outputs, still
+                                   one ``pallas_call`` per dtype group
+                                   per step (DESIGN.md §12).
 
-On non-TPU backends (this container) both fall through to the pure-jnp
-oracle unless interpret mode is requested — explicitly per call, or
+On non-TPU backends (this container) all fall through to the pure-jnp
+oracles unless interpret mode is requested — explicitly per call, or
 process-wide via :func:`force_interpret` (used by tests and benchmarks to
 exercise the kernel path on CPU).
 """
@@ -28,6 +38,7 @@ from repro.kernels.scaffold_update import ref
 from repro.kernels.scaffold_update.kernel import (
     BLOCK_ROWS,
     LANES,
+    scaffold_momentum_update_2d,
     scaffold_update_2d,
 )
 
@@ -132,6 +143,89 @@ def scaffold_update_packed(y, g, corr, eta: float, *, interpret: bool = False):
             out_leaves[i] = buf[off:off + n].reshape(leaves_y[i].shape)
             off += n
     return jax.tree.unflatten(treedef, out_leaves)
+
+
+@partial(jax.jit, static_argnames=("eta", "beta", "interpret"))
+def _scaffold_momentum_update_leaf(y, g, corr, m, eta: float, beta: float,
+                                   interpret: bool):
+    if not (_is_tpu() or interpret):
+        return ref.scaffold_momentum_update_ref(y, g, corr, m, eta, beta)
+    shape, n = y.shape, y.size
+    out_y, out_m = scaffold_momentum_update_2d(
+        _pad_to_tiles(y.reshape(-1)),
+        _pad_to_tiles(g.reshape(-1)),
+        _pad_to_tiles(corr.reshape(-1)),
+        _pad_to_tiles(m.reshape(-1)),
+        eta,
+        beta,
+        interpret=interpret,
+    )
+    return (out_y.reshape(-1)[:n].reshape(shape),
+            out_m.reshape(-1)[:n].reshape(shape))
+
+
+def scaffold_momentum_update(y, g, corr, m, eta: float, beta: float, *,
+                             interpret: bool = False):
+    """(y', m') = (y - eta*m', beta*m + (g + corr)), elementwise-fused.
+    Any shape; m is the heavy-ball slot (fp32 in the solver)."""
+    return _scaffold_momentum_update_leaf(
+        y, g, corr, m, eta, beta, bool(interpret or _FORCE_INTERPRET))
+
+
+def scaffold_momentum_update_packed(y, g, corr, m, eta: float, beta: float,
+                                    *, interpret: bool = False):
+    """Pytree-level fused heavy-ball update: one ``pallas_call`` per
+    dtype group, 4 packed inputs / 2 packed outputs.
+
+    Same packing contract as :func:`scaffold_update_packed` — leaves are
+    grouped by their exact ``(y, g, corr, m)`` dtype quadruple and
+    concatenated (never cast) into one zero-padded (rows, 128) buffer
+    per operand, so the kernel sees the same operand dtypes as the
+    per-leaf path and matches it (and the CPU oracle fallback) exactly.
+    Returns ``(y_tree, m_tree)``.
+    """
+    interpret = bool(interpret or _FORCE_INTERPRET)
+    leaves_y, treedef = jax.tree.flatten(y)
+    leaves_g = treedef.flatten_up_to(g)
+    leaves_c = treedef.flatten_up_to(corr)
+    leaves_m = treedef.flatten_up_to(m)
+    if not (_is_tpu() or interpret):
+        outs = [ref.scaffold_momentum_update_ref(yy, gg, cc, mm, eta, beta)
+                for yy, gg, cc, mm in zip(leaves_y, leaves_g, leaves_c,
+                                          leaves_m)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+                jax.tree.unflatten(treedef, [o[1] for o in outs]))
+    groups = {}  # (y, g, corr, m) dtype quadruple -> leaf indices
+    for i, (ly, lg, lc, lm) in enumerate(zip(leaves_y, leaves_g, leaves_c,
+                                             leaves_m)):
+        key = (jnp.dtype(ly.dtype), jnp.dtype(lg.dtype),
+               jnp.dtype(lc.dtype), jnp.dtype(lm.dtype))
+        groups.setdefault(key, []).append(i)
+    out_y = [None] * len(leaves_y)
+    out_m = [None] * len(leaves_y)
+    for idxs in groups.values():
+        buf_y, buf_m = scaffold_momentum_update_2d(
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_y[i].reshape(-1) for i in idxs])),
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_g[i].reshape(-1) for i in idxs])),
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_c[i].reshape(-1) for i in idxs])),
+            _pad_to_tiles(jnp.concatenate(
+                [leaves_m[i].reshape(-1) for i in idxs])),
+            eta,
+            beta,
+            interpret=interpret,
+        )
+        buf_y, buf_m = buf_y.reshape(-1), buf_m.reshape(-1)
+        off = 0
+        for i in idxs:
+            n = leaves_y[i].size
+            out_y[i] = buf_y[off:off + n].reshape(leaves_y[i].shape)
+            out_m[i] = buf_m[off:off + n].reshape(leaves_y[i].shape)
+            off += n
+    return (jax.tree.unflatten(treedef, out_y),
+            jax.tree.unflatten(treedef, out_m))
 
 
 def count_pallas_calls(fn, *args, **kwargs) -> int:

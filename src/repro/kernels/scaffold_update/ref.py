@@ -18,3 +18,25 @@ def scaffold_update_tree_ref(y, g, corr, eta: float):
     return jax.tree.map(
         lambda yy, gg, cc: scaffold_update_ref(yy, gg, cc, eta), y, g, corr
     )
+
+
+def scaffold_momentum_update_ref(y, g, corr, m, eta: float, beta: float):
+    """Fused heavy-ball oracle (the ``momentum`` local solver's step):
+    m' = beta*m + (g + corr);  y' = y - eta*m' — fp32 accumulation, one
+    rounding at the casts back to the operand dtypes."""
+    m_new = beta * m.astype(jnp.float32) + (
+        g.astype(jnp.float32) + corr.astype(jnp.float32)
+    )
+    y_new = (y.astype(jnp.float32) - eta * m_new).astype(y.dtype)
+    return y_new, m_new.astype(m.dtype)
+
+
+def scaffold_momentum_update_tree_ref(y, g, corr, m, eta: float, beta: float):
+    """Per-leaf oracle for the packed momentum path; returns (y', m')."""
+    out = jax.tree.map(
+        lambda yy, gg, cc, mm: scaffold_momentum_update_ref(
+            yy, gg, cc, mm, eta, beta), y, g, corr, m
+    )
+    is2 = lambda t: isinstance(t, tuple) and len(t) == 2  # noqa: E731
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is2),
+            jax.tree.map(lambda t: t[1], out, is_leaf=is2))

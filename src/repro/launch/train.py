@@ -22,8 +22,10 @@ from repro.core import (
     FederatedTrainer,
     algorithm_names,
     compressor_names,
+    local_solver_names,
     server_optimizer_names,
 )
+from repro.optim.schedules import schedule_names
 from repro.data import SyntheticLMFederated
 from repro.models import model as M
 
@@ -62,6 +64,24 @@ def main(argv=None):
                     choices=[""] + list(server_optimizer_names()),
                     help="server optimizer ('' = algorithm default)")
     ap.add_argument("--server-momentum", type=float, default=0.0)
+    ap.add_argument("--local-solver", default="sgd",
+                    choices=list(local_solver_names()),
+                    help="client inner optimizer (stateful solvers persist "
+                         "per-client slots in the client store; "
+                         "DESIGN.md §12)")
+    ap.add_argument("--local-momentum", type=float, default=0.9,
+                    help="heavy-ball beta of the momentum local solver / "
+                         "beta1 of the adam local solver")
+    ap.add_argument("--local-beta2", type=float, default=0.99,
+                    help="second-moment decay of the adam local solver")
+    ap.add_argument("--eta-l-schedule", default="",
+                    choices=[""] + list(schedule_names()),
+                    help="per-local-step eta_l schedule (sgd_sched solver "
+                         "only)")
+    ap.add_argument("--list-registries", action="store_true",
+                    help="print the four strategy registries (algorithms, "
+                         "server optimizers, compressors, local solvers) "
+                         "and exit")
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
     ap.add_argument("--compress", default="none",
@@ -94,6 +114,16 @@ def main(argv=None):
     ap.add_argument("--checkpoint", default="")
     args = ap.parse_args(argv)
 
+    if args.list_registries:
+        for title, names in (
+            ("algorithms", algorithm_names()),
+            ("server_optimizers", server_optimizer_names()),
+            ("compressors", compressor_names()),
+            ("local_solvers", local_solver_names()),
+        ):
+            print(f"{title}: {' '.join(names)}")
+        return None
+
     cfg = preset_config(args.arch, args.preset)
     spec = FedRoundSpec(
         algorithm=args.algorithm,
@@ -105,6 +135,10 @@ def main(argv=None):
         eta_g=args.eta_g,
         server_optimizer=args.server_opt,
         server_momentum=args.server_momentum,
+        local_solver=args.local_solver,
+        local_momentum=args.local_momentum,
+        local_beta2=args.local_beta2,
+        eta_l_schedule=args.eta_l_schedule,
         weighted_aggregation=args.weighted,
         compress=args.compress,
         compress_k=args.compress_k,

@@ -1,7 +1,12 @@
-"""Step-size schedules for the server/global step-size eta_g."""
+"""Step-size schedules: the server/global eta_g factories, plus the
+per-local-step eta_l tables consumed by the ``sgd_sched`` local solver
+(``core/local_solver.py``) — the K schedule values are precomputed at
+trace time into a (K,) table so the solver can index them with a traced
+step counter inside ``lax.scan``."""
 from __future__ import annotations
 
 import math
+from typing import List, Tuple
 
 
 def constant(lr: float):
@@ -23,3 +28,35 @@ def cosine_decay(lr: float, total: int, warmup: int = 0, floor: float = 0.0):
         return floor + (lr - floor) * 0.5 * (1 + math.cos(math.pi * min(t, 1.0)))
 
     return fn
+
+
+# ---------------------------------------------------------------------------
+# per-local-step eta_l tables (the ``sgd_sched`` local solver)
+# ---------------------------------------------------------------------------
+
+_LOCAL_SCHEDULES = ("constant", "warmup", "cosine")
+
+
+def schedule_names() -> Tuple[str, ...]:
+    """Names accepted by ``FedRoundSpec.eta_l_schedule``."""
+    return _LOCAL_SCHEDULES
+
+
+def local_eta_table(name: str, eta_l: float, K: int) -> List[float]:
+    """The K per-local-step step sizes of one round, as plain floats.
+
+    ``constant`` is exactly eta_l every step; ``warmup`` ramps linearly
+    over the first ceil(K/4) steps; ``cosine`` decays from eta_l to 0
+    over the K steps. K is static under jit, so the caller embeds the
+    table as a (K,) constant and indexes it with the traced step counter.
+    """
+    if name == "constant":
+        fn = constant(eta_l)
+    elif name == "warmup":
+        fn = linear_warmup(eta_l, max(1, -(-K // 4)))
+    elif name == "cosine":
+        fn = cosine_decay(eta_l, K)
+    else:
+        raise ValueError(
+            f"unknown eta_l schedule {name!r}; known: {_LOCAL_SCHEDULES}")
+    return [float(fn(t)) for t in range(K)]

@@ -150,7 +150,7 @@ def test_weighted_aggregation_matches_manual():
     for i in range(4):
         bi = jax.tree.map(lambda a: a[i], batches)
         ci_i = jax.tree.map(lambda a: a[i], ci)
-        dy, _, _, _ = client_update(GRAD_FN, spec, x, c, ci_i, bi)
+        dy, _, _, _, _ = client_update(GRAD_FN, spec, x, c, ci_i, bi)
         dys.append(np.asarray(dy["x"]))
     wn = np.asarray(w) / np.asarray(w).sum()
     expected = np.asarray(x["x"]) + (wn[:, None] * np.stack(dys)).sum(0)

@@ -232,3 +232,60 @@ def test_scanned_engine_runs_with_sharded_residual_store():
             sample_key=jax.random.key(0), data_key=jax.random.key(1),
             comp_key=jax.random.key(2))
         assert bool(jnp.isfinite(jnp.abs(store3["c_i"]["x"]).sum()))
+
+
+def test_scanned_engine_runs_with_sharded_solver_store():
+    """The stateful-local-solver client store — control variates *and*
+    per-client solver slots as (N, ...) rows — shards through
+    dist.partition_client_store and runs run_rounds under a real mesh,
+    for both client strategies with the param-structured FSDP shard_fn
+    (the constraint cannot apply to the slot tree wholesale — solvers
+    pin param-shaped slot entries via LocalSolver.shard_slots;
+    DESIGN.md §12)."""
+    import dataclasses as dc
+
+    from repro.configs.base import FedRoundSpec
+    from repro.core import init_server_state, make_grad_fn, run_rounds
+    from repro.dist import partition_client_store, partition_params
+    from repro.data import make_similarity_quadratics, quadratic_loss
+    from repro.launch.mesh import make_debug_mesh
+
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=8, num_sampled=2,
+                        local_steps=2, local_batch=1, eta_l=0.05,
+                        local_solver="adam")
+    ds = make_similarity_quadratics(8, 4, delta=0.3, G=4.0, mu=0.3, seed=0)
+    mesh = make_debug_mesh(1, 1)
+    with mesh:
+        params = {"x": jnp.ones((4,), jnp.float32)}
+        server = init_server_state(spec, params)
+        slot_rows = lambda: {  # noqa: E731
+            "m": {"x": jnp.zeros((8, 4), jnp.float32)},
+            "v": {"x": jnp.zeros((8, 4), jnp.float32)},
+            "t": jnp.zeros((8,), jnp.int32)}
+        store = {"c_i": {"x": jnp.zeros((8, 4), jnp.float32)},
+                 "solver": slot_rows()}
+        store_sh = partition_client_store(
+            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         store),
+            mesh, spec.strategy)
+        store = jax.device_put(store, store_sh)
+        grad_fn = make_grad_fn(quadratic_loss)
+        # the exact shard_fn shape launch/dryrun.py builds: a constraint
+        # over the *params* tree, closed over x_sh
+        x_sh = partition_params(
+            jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                         params), mesh, "client_sequential")
+        shard_fn = lambda tree: jax.lax.with_sharding_constraint(  # noqa: E731
+            tree, x_sh)
+        for strategy, sf in (("client_parallel", None),
+                             ("client_sequential", shard_fn)):
+            sp = dc.replace(spec, strategy=strategy)
+            _, store2, metrics = run_rounds(
+                grad_fn, sp, server, store, 3, data=ds.device_data(),
+                batch_fn=ds.device_batch_fn(2, 1),
+                sample_key=jax.random.key(0), data_key=jax.random.key(1),
+                shard_fn=sf)
+            assert bool(jnp.isfinite(metrics["loss"]).all()), strategy
+            # the slots actually accumulated per-client state
+            assert float(jnp.abs(store2["solver"]["m"]["x"]).sum()) > 0
+            assert int(store2["solver"]["t"].max()) > 0

@@ -1,11 +1,21 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
 executed in interpret mode (kernel body runs on CPU)."""
+import contextlib
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.kernels.scaffold_update.ops import scaffold_update
-from repro.kernels.scaffold_update.ref import scaffold_update_ref
+from repro.kernels.scaffold_update.ops import (
+    scaffold_momentum_update,
+    scaffold_momentum_update_packed,
+    scaffold_update,
+)
+from repro.kernels.scaffold_update.ref import (
+    scaffold_momentum_update_ref,
+    scaffold_update_ref,
+)
 from repro.kernels.swa_attention.ops import swa_attention
 from repro.kernels.swa_attention.ref import swa_attention_ref
 
@@ -30,6 +40,97 @@ def test_scaffold_update_kernel(shape, dtype, eta):
     err = jnp.max(jnp.abs(out_k.astype(jnp.float32)
                           - out_r.astype(jnp.float32)))
     assert float(err) < tol
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("eta,beta", [(0.05, 0.9), (1.0, 0.0), (0.0, 0.5)])
+def test_scaffold_momentum_update_kernel(shape, dtype, eta, beta):
+    """The fused heavy-ball variant (momentum local solver, DESIGN.md
+    §12) matches its fp32-accumulating oracle for both outputs; the
+    moment slot is fp32 like the solver keeps it."""
+    key = jax.random.key(sum(shape) + 1)
+    ks = jax.random.split(key, 4)
+    y = jax.random.normal(ks[0], shape, dtype)
+    g = jax.random.normal(ks[1], shape, dtype)
+    corr = jax.random.normal(ks[2], shape, dtype)
+    m = jax.random.normal(ks[3], shape, jnp.float32)
+    out_y, out_m = scaffold_momentum_update(y, g, corr, m, eta, beta,
+                                            interpret=True)
+    ref_y, ref_m = scaffold_momentum_update_ref(y, g, corr, m, eta, beta)
+    assert out_y.shape == shape and out_y.dtype == dtype
+    assert out_m.shape == shape and out_m.dtype == jnp.float32
+    tol = 1e-6 if dtype == jnp.float32 else 5e-3
+    for a, b in ((out_y, ref_y), (out_m, ref_m)):
+        err = jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)))
+        assert float(err) < tol
+
+
+def test_scaffold_momentum_update_packed_matches_per_leaf():
+    """The packed pytree path (one pallas_call per dtype group) slices
+    back out exactly the per-leaf kernel results, mixed dtypes included."""
+    ks = jax.random.split(jax.random.key(7), 8)
+    tree_y = {"a": jax.random.normal(ks[0], (37,), jnp.float32),
+              "b": {"w": jax.random.normal(ks[1], (5, 9), jnp.bfloat16)}}
+    tree_g = {"a": jax.random.normal(ks[2], (37,), jnp.float32),
+              "b": {"w": jax.random.normal(ks[3], (5, 9), jnp.bfloat16)}}
+    tree_c = {"a": jax.random.normal(ks[4], (37,), jnp.float32),
+              "b": {"w": jax.random.normal(ks[5], (5, 9), jnp.bfloat16)}}
+    tree_m = jax.tree.map(
+        lambda a: jax.random.normal(ks[6], a.shape, jnp.float32), tree_y)
+    out_y, out_m = scaffold_momentum_update_packed(
+        tree_y, tree_g, tree_c, tree_m, 0.1, 0.9, interpret=True)
+    for path in (("a",), ("b", "w")):
+        get = lambda t: t[path[0]] if len(path) == 1 else t[path[0]][path[1]]  # noqa: E731
+        leaf_y, leaf_m = scaffold_momentum_update(
+            get(tree_y), get(tree_g), get(tree_c), get(tree_m), 0.1, 0.9,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(get(out_y), jnp.float32),
+                                      np.asarray(leaf_y, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(get(out_m)),
+                                      np.asarray(leaf_m))
+
+
+def test_fedprox_prox_term_fp32_agreement():
+    """Satellite fix: the FedProx prox add accumulates in fp32, so for
+    sub-fp32 params the fused and jnp update paths round identically to
+    the fp32 oracle — one rounding, at the final cast to the param dtype
+    (previously the prox term was cast back to the bf16 grad dtype and
+    the two paths diverged from the oracle)."""
+    from repro.core.local_solver import get_local_solver, run_local_steps
+    from types import SimpleNamespace
+
+    dim, eta, mu = 33, 0.1, 0.7
+    ks = jax.random.split(jax.random.key(3), 4)
+    y0 = {"w": jax.random.normal(ks[0], (dim,), jnp.bfloat16)}
+    x0 = {"w": jax.random.normal(ks[1], (dim,), jnp.bfloat16)}
+    gfix = {"w": jax.random.normal(ks[2], (dim,), jnp.bfloat16)}
+    corr = {"w": jax.random.normal(ks[3], (dim,), jnp.bfloat16)}
+    batches = {"w": jnp.zeros((1, 1), jnp.float32)}  # K=1 dummy
+
+    def grad_fn(params, batch):
+        return gfix, {"loss": jnp.zeros((), jnp.float32)}
+
+    from repro.kernels.scaffold_update.ops import force_interpret
+
+    spec = SimpleNamespace(eta_l=eta)
+    outs = {}
+    for fused in (False, True):
+        # fused=True runs the actual Pallas kernel body (interpret mode)
+        ctx = force_interpret() if fused else contextlib.nullcontext()
+        with ctx:
+            y, _, _ = run_local_steps(
+                grad_fn, spec, y0, batches,
+                solver=get_local_solver("sgd"), correction=corr,
+                prox_mu=mu, prox_center=x0, use_fused_update=fused)
+        outs[fused] = np.asarray(y["w"].astype(jnp.float32))
+    f32 = lambda t: t["w"].astype(jnp.float32)  # noqa: E731
+    g32 = f32(gfix) + mu * (f32(y0) - f32(x0))
+    oracle = (f32(y0) - eta * (g32 + f32(corr))).astype(jnp.bfloat16)
+    oracle = np.asarray(oracle.astype(jnp.float32))
+    np.testing.assert_array_equal(outs[False], oracle)
+    np.testing.assert_array_equal(outs[True], oracle)
 
 
 SWA_CASES = [

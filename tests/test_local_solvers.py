@@ -1,0 +1,404 @@
+"""Solver-contract property tests for the LocalSolver registry
+(DESIGN.md §12).
+
+Every registered ``LocalSolver`` must hold, under hypothesis-driven
+shapes/scales/seeds:
+
+  * slot shape/dtype stability — ``step`` returns slots with exactly the
+    tree structure, shapes and dtypes of ``init`` (the scan-carry
+    contract that lets slots ride lax.scan / vmap / the device store),
+  * sgd-solver == legacy ``local_sgd`` identity — the back-compat seed
+    surface produces bit-for-bit the registry path's trajectory,
+  * schedule monotonicity — the ``sgd_sched`` eta tables are positive,
+    K-long, nondecreasing under warmup and nonincreasing under cosine
+    (constant is exactly constant),
+
+plus engine-level contracts: registry error paths mirror the other
+three registries, spec validation rejects meaningless combinations
+loudly, stateful solvers actually accumulate state across rounds, and
+the fused momentum path (one ``pallas_call`` per dtype group) matches
+the jnp path and the fp32 oracle.
+"""
+import contextlib
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # Degrade per-test instead of importorskip'ing the module: the
+    # registry / validation / fused-path tests below need no hypothesis
+    # and must run everywhere. The skip reason matches check_skips.py's
+    # missing-optional-dependency pattern so CI still proves the
+    # property tests execute there.
+    def given(**kw):
+        return lambda fn: pytest.mark.skip(
+            reason="could not import 'hypothesis'")(fn)
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 — stands in for hypothesis.strategies
+        integers = staticmethod(lambda a, b: None)
+        floats = staticmethod(lambda a, b: None)
+        sampled_from = staticmethod(lambda xs: None)
+
+from repro.configs.base import FedRoundSpec
+from repro.core import (
+    get_local_solver,
+    local_sgd,
+    local_solver_names,
+    register_local_solver,
+    run_local_steps,
+)
+from repro.core.local_solver import LocalSolver, resolve_local_solver
+from repro.kernels.scaffold_update import ops as fused_ops
+from repro.optim.schedules import local_eta_table, schedule_names
+
+ISSUE_SOLVERS = ("sgd", "momentum", "adam", "sgd_sched")
+
+
+def _spec(solver="sgd", K=4, **kw):
+    base = dict(algorithm="scaffold", num_clients=6, num_sampled=3,
+                local_steps=K, local_batch=1, eta_l=0.05,
+                local_solver=solver,
+                eta_l_schedule="cosine" if solver == "sgd_sched" else "")
+    base.update(kw)
+    return FedRoundSpec(**base)
+
+
+def _tree(seed, n, m, dtype=jnp.float32, scale=1.0):
+    ka, kb = jax.random.split(jax.random.key(seed))
+    return {
+        "a": (jax.random.normal(ka, (n,)) * scale).astype(dtype),
+        "nested": {"b": (jax.random.normal(kb, (m, 3)) * scale
+                         ).astype(dtype)},
+    }
+
+
+def _struct(tree):
+    return [(jax.tree_util.keystr(p), l.shape, jnp.dtype(l.dtype))
+            for p, l in jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contains_issue_solvers():
+    assert set(local_solver_names()) >= set(ISSUE_SOLVERS)
+
+
+def test_unknown_solver_raises_with_registered_listing():
+    with pytest.raises(KeyError, match="registered"):
+        get_local_solver("lbfgs")
+    with pytest.raises(AssertionError):
+        _spec(solver="lbfgs")
+
+
+def test_stateful_flags():
+    assert not get_local_solver("sgd").stateful
+    assert not get_local_solver("sgd_sched").stateful
+    assert get_local_solver("momentum").stateful
+    assert get_local_solver("adam").stateful
+
+
+def test_spec_validation_is_loud():
+    # empty name resolves to sgd (duck-typed/legacy specs)
+    assert _spec(solver="").local_solver == "sgd"
+    assert resolve_local_solver(SimpleNamespace()) == "sgd"
+    # a schedule on a non-sched solver is rejected, not ignored
+    with pytest.raises(AssertionError, match="has no effect"):
+        _spec(solver="sgd", eta_l_schedule="cosine")
+    # sgd_sched without a schedule is rejected, not defaulted
+    with pytest.raises(AssertionError, match="needs eta_l_schedule"):
+        _spec(solver="sgd_sched", eta_l_schedule="")
+    with pytest.raises(AssertionError):
+        _spec(local_momentum=1.0)
+    # whole-batch sgd takes no local steps: any non-sgd solver
+    # (including every stateful one) is rejected loudly
+    with pytest.raises(AssertionError, match="has no effect"):
+        FedRoundSpec(algorithm="sgd", num_clients=6, num_sampled=3,
+                     local_steps=2, local_batch=1, local_solver="momentum")
+
+
+def test_registering_new_solver_is_one_subclass():
+    """Extensibility proof (mirrors the other registries' tests): a
+    solver registered here is immediately spec-addressable."""
+    from repro.core.local_solver import _LOCAL_SOLVERS, SGDSolver
+
+    class SGDClone(SGDSolver):
+        name = "sgd_clone_test"
+
+    register_local_solver(SGDClone())
+    try:
+        spec = _spec(solver="sgd_clone_test")
+        assert spec.local_solver == "sgd_clone_test"
+    finally:
+        del _LOCAL_SOLVERS["sgd_clone_test"]
+
+
+def test_base_class_is_abstract_enough():
+    solver = LocalSolver()
+    assert solver.init(_spec(), {"a": jnp.ones((2,))}) == {}
+    with pytest.raises(NotImplementedError):
+        solver.step(_spec(), {}, {"a": jnp.ones((2,))},
+                    {"a": jnp.ones((2,))}, None, 0)
+
+
+# ---------------------------------------------------------------------------
+# slot contracts (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("solver_name", ISSUE_SOLVERS)
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 32), m=st.integers(1, 6), seed=st.integers(0, 1000),
+       steps=st.integers(1, 6))
+def test_slot_shapes_and_dtypes_stable_across_steps(solver_name, n, m, seed,
+                                                    steps):
+    """init/step slot trees have identical structure, shapes and dtypes
+    at every step — the scan-carry/device-store contract."""
+    solver = get_local_solver(solver_name)
+    spec = _spec(solver_name)
+    y = _tree(seed, n, m)
+    slots = solver.init(spec, y)
+    ref_struct = _struct(slots)
+    corr = _tree(seed + 1, n, m)
+    for t in range(steps):
+        grads = _tree(seed + 2 + t, n, m)
+        y, slots = solver.step(spec, slots, y, grads,
+                               corr if t % 2 == 0 else None, t)
+        assert _struct(slots) == ref_struct
+        assert _struct(y) == _struct(grads)  # y keeps its shapes/dtypes
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 32), seed=st.integers(0, 1000),
+       k_steps=st.integers(1, 5), eta=st.floats(1e-3, 0.5),
+       with_corr=st.integers(0, 1), with_prox=st.integers(0, 1))
+def test_sgd_solver_matches_legacy_local_sgd(n, seed, k_steps, eta,
+                                             with_corr, with_prox):
+    """The back-compat ``local_sgd`` surface is bit-for-bit the registry
+    path (``run_local_steps`` with the sgd solver) — no behavior change
+    for existing configs."""
+    ks = jax.random.split(jax.random.key(seed), 4)
+    y0 = {"w": jax.random.normal(ks[0], (n,))}
+    center = {"w": jax.random.normal(ks[1], (n,))}
+    corr = {"w": jax.random.normal(ks[2], (n,))} if with_corr else None
+    mu = 0.3 if with_prox else 0.0
+    batches = {"w": jax.random.normal(ks[3], (k_steps, 1, n))}
+
+    def grad_fn(params, batch):
+        g = {"w": params["w"] * 0.9 + batch["w"][0]}
+        return g, {"loss": jnp.sum(params["w"] ** 2)}
+
+    y_legacy, loss_legacy = local_sgd(
+        grad_fn, y0, batches, eta, correction=corr, prox_mu=mu,
+        prox_center=center if mu else None)
+    y_reg, slots, loss_reg = run_local_steps(
+        grad_fn, SimpleNamespace(eta_l=eta), y0, batches,
+        solver=get_local_solver("sgd"), correction=corr, prox_mu=mu,
+        prox_center=center if mu else None)
+    assert slots == {}
+    np.testing.assert_array_equal(np.asarray(y_legacy["w"]),
+                                  np.asarray(y_reg["w"]))
+    np.testing.assert_array_equal(np.asarray(loss_legacy),
+                                  np.asarray(loss_reg))
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(1, 32), eta=st.floats(1e-4, 1.0))
+def test_schedule_tables_monotone(K, eta):
+    """warmup is nondecreasing, cosine is nonincreasing, constant is
+    exactly constant; all tables are K-long and positive-bounded."""
+    for name in schedule_names():
+        table = local_eta_table(name, eta, K)
+        assert len(table) == K
+        assert all(0.0 <= v <= eta * (1 + 1e-9) for v in table)
+    const = local_eta_table("constant", eta, K)
+    assert all(v == eta for v in const)
+    warm = local_eta_table("warmup", eta, K)
+    assert all(a <= b + 1e-12 for a, b in zip(warm, warm[1:]))
+    assert warm[-1] == eta  # ramp completes within the round
+    cos = local_eta_table("cosine", eta, K)
+    assert cos[0] == eta
+    assert all(a >= b - 1e-12 for a, b in zip(cos, cos[1:]))
+
+
+def test_sgd_sched_rejects_step_count_mismatch():
+    """A scan longer than the eta table would silently clamp the gather
+    to the last eta — run_local_steps rejects the mismatch at trace time
+    instead (LocalSolver.check_steps)."""
+    spec = _spec("sgd_sched", K=4, eta_l_schedule="cosine")
+    y0 = {"w": jnp.ones((3,), jnp.float32)}
+    batches8 = {"w": jnp.zeros((8, 1, 3), jnp.float32)}  # 8 != K=4
+
+    def grad_fn(params, batch):
+        return params, {"loss": jnp.zeros(())}
+
+    with pytest.raises(AssertionError, match="local steps"):
+        run_local_steps(grad_fn, spec, y0, batches8)
+
+
+def test_sgd_sched_constant_matches_sgd():
+    """The constant schedule is plain sgd (same trajectory to float
+    tolerance — the scheduled eta is a traced fp32 scalar, the sgd eta a
+    python weak-typed float, identical in fp32 arithmetic)."""
+    spec_sched = _spec("sgd_sched", eta_l_schedule="constant")
+    spec_sgd = _spec("sgd")
+    y0 = {"w": jnp.ones((8,), jnp.float32)}
+    batches = {"w": jax.random.normal(jax.random.key(0), (4, 1, 8))}
+
+    def grad_fn(params, batch):
+        g = {"w": params["w"] + batch["w"][0]}
+        return g, {"loss": jnp.zeros(())}
+
+    y_a, _, _ = run_local_steps(grad_fn, spec_sched, y0, batches)
+    y_b, _, _ = run_local_steps(grad_fn, spec_sgd, y0, batches)
+    np.testing.assert_array_equal(np.asarray(y_a["w"]), np.asarray(y_b["w"]))
+
+
+# ---------------------------------------------------------------------------
+# momentum/adam semantics + the fused momentum path
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 48), seed=st.integers(0, 1000),
+       beta=st.floats(0.0, 0.99))
+def test_momentum_fused_matches_jnp_and_oracle(n, seed, beta):
+    """The jnp path matches the fp32 oracle bitwise (identical eager op
+    sequences); the packed kernel path (interpret mode, jitted — XLA may
+    contract a mul-add into an fma) matches to 1-ulp-scale tolerance."""
+    from repro.kernels.scaffold_update.ref import (
+        scaffold_momentum_update_ref,
+    )
+
+    solver = get_local_solver("momentum")
+    spec = _spec("momentum", local_momentum=float(beta))
+    ks = jax.random.split(jax.random.key(seed), 4)
+    y = {"w": jax.random.normal(ks[0], (n,))}
+    g = {"w": jax.random.normal(ks[1], (n,))}
+    corr = {"w": jax.random.normal(ks[2], (n,))}
+    slots = {"m": {"w": jax.random.normal(ks[3], (n,))}}
+    y_jnp, s_jnp = solver.step(spec, slots, y, g, corr, 0)
+    with fused_ops.force_interpret():
+        y_fused, s_fused = solver.step(spec, slots, y, g, corr, 0,
+                                       use_fused_update=True)
+    ref_y, ref_m = scaffold_momentum_update_ref(
+        y["w"], g["w"], corr["w"], slots["m"]["w"], spec.eta_l, beta)
+    np.testing.assert_array_equal(np.asarray(y_jnp["w"]), np.asarray(ref_y))
+    np.testing.assert_array_equal(np.asarray(s_jnp["m"]["w"]),
+                                  np.asarray(ref_m))
+    np.testing.assert_allclose(np.asarray(y_fused["w"]), np.asarray(ref_y),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_fused["m"]["w"]),
+                               np.asarray(ref_m), rtol=1e-6, atol=1e-6)
+
+
+def test_momentum_fused_is_one_pallas_call_per_dtype_group():
+    """The packed momentum path amortises launches exactly like the sgd
+    packed path: one pallas_call per (y, g, corr, m) dtype group."""
+    tree32 = {"a": jnp.ones((40,), jnp.float32),
+              "b": jnp.ones((3, 7), jnp.float32)}
+    tree16 = {"c": jnp.ones((11,), jnp.bfloat16)}
+    y = {**tree32, **tree16}
+    m = jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), y)
+    with fused_ops.force_interpret():
+        calls = fused_ops.count_pallas_calls(
+            lambda yy: fused_ops.scaffold_momentum_update_packed(
+                yy, y, y, m, 0.1, 0.9), y)
+    assert calls == 2  # {f32 params} + {bf16 params}, not one per leaf
+
+
+def test_momentum_state_accumulates_across_rounds():
+    """Passing round-k slots into round k+1 changes the trajectory vs a
+    fresh init — the state the client store persists is load-bearing."""
+    spec = _spec("momentum")
+    solver = get_local_solver("momentum")
+    y0 = {"w": jnp.ones((6,), jnp.float32)}
+    batches = {"w": jnp.ones((3, 1, 6), jnp.float32)}
+
+    def grad_fn(params, batch):
+        return {"w": params["w"]}, {"loss": jnp.zeros(())}
+
+    y1, slots1, _ = run_local_steps(grad_fn, spec, y0, batches)
+    assert float(np.abs(np.asarray(slots1["m"]["w"])).sum()) > 0
+    y_warm, _, _ = run_local_steps(grad_fn, spec, y1, batches, slots=slots1)
+    y_cold, _, _ = run_local_steps(grad_fn, spec, y1, batches)
+    assert not np.array_equal(np.asarray(y_warm["w"]),
+                              np.asarray(y_cold["w"]))
+
+
+def test_pipelined_matches_sync_with_stateful_solver():
+    """pipeline_depth>0 stays bit-for-bit identical to the synchronous
+    loop when the local solver persists per-client slots — the stale-row
+    re-gather covers the solver store like the c_i/residual stores."""
+    from repro.core import FederatedTrainer
+    from repro.data import make_similarity_quadratics, quadratic_loss
+
+    spec = _spec("momentum", num_clients=8, num_sampled=3, local_steps=3)
+    ds = make_similarity_quadratics(8, 5, delta=0.3, G=4.0, mu=0.3, seed=1)
+    init = lambda k: {"x": jnp.ones((5,), jnp.float32)}
+    sync = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0)
+    pipe = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0,
+                            pipeline_depth=2)
+    for _ in range(6):
+        sync.run_round()
+        pipe.run_round()
+    np.testing.assert_array_equal(np.asarray(sync.x["x"]),
+                                  np.asarray(pipe.x["x"]))
+    ids = np.arange(8)
+    for a, b in zip(jax.tree.leaves(sync.solver_store.gather(ids)),
+                    jax.tree.leaves(pipe.solver_store.gather(ids))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert sync.history == pipe.history
+
+
+def test_client_sequential_matches_parallel_with_stateful_solver():
+    """Both client strategies thread the solver slots identically
+    (aggregation equal to float tolerance, like the other
+    strategy-equivalence tests)."""
+    from repro.core import FederatedTrainer
+    from repro.data import make_similarity_quadratics, quadratic_loss
+    import dataclasses
+
+    ds = make_similarity_quadratics(8, 5, delta=0.3, G=4.0, mu=0.3, seed=1)
+    init = lambda k: {"x": jnp.ones((5,), jnp.float32)}
+    par = _spec("adam", num_clients=8, num_sampled=3, local_steps=3)
+    seq = dataclasses.replace(par, strategy="client_sequential")
+    tr_p = FederatedTrainer(quadratic_loss, init, par, ds, seed=0)
+    tr_s = FederatedTrainer(quadratic_loss, init, seq, ds, seed=0)
+    for _ in range(4):
+        tr_p.run_round()
+        tr_s.run_round()
+    np.testing.assert_allclose(np.asarray(tr_p.x["x"]),
+                               np.asarray(tr_s.x["x"]),
+                               rtol=1e-5, atol=1e-6)
+    ids = np.arange(8)
+    for a, b in zip(jax.tree.leaves(tr_p.solver_store.gather(ids)),
+                    jax.tree.leaves(tr_s.solver_store.gather(ids))):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_adam_first_step_is_bias_corrected_sign_step():
+    """With zero slots, Adam's first update is eta * g/(|g| + ~eps) —
+    the bias correction must cancel the (1-beta) moment scaling."""
+    spec = _spec("adam")
+    solver = get_local_solver("adam")
+    y = {"w": jnp.zeros((5,), jnp.float32)}
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5, -0.25, 3.0], jnp.float32)}
+    slots = solver.init(spec, y)
+    y_new, slots_new = solver.step(spec, slots, y, g, None, 0)
+    assert int(slots_new["t"]) == 1
+    np.testing.assert_allclose(np.asarray(y_new["w"]),
+                               -spec.eta_l * np.sign(np.asarray(g["w"])),
+                               rtol=1e-4, atol=1e-6)

@@ -10,9 +10,13 @@ device RNG contract) across
         x {sgd, momentum, adam server optimizers}
         x {fused update on/off}
 
-plus chunk-size invariance (one scan of R == any chunking of R) and
-bitwise checkpoint-resume when the restore round lands mid-chunk
-relative to the original chunking.
+plus the compression axis (DESIGN.md §11: every codec, residuals as
+device-store rows) and the local-solver axis (DESIGN.md §12: every
+registered ``LocalSolver`` x {scaffold, scaffold_m} x {fused on/off},
+persisted solver slots as device-store rows), plus chunk-size
+invariance (one scan of R == any chunking of R) and bitwise
+checkpoint-resume when the restore round lands mid-chunk relative to
+the original chunking.
 """
 import contextlib
 from functools import partial
@@ -74,17 +78,31 @@ def _assert_tree_equal(a, b):
 def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
     """R iterations of the host loop on the scanned engine's RNG contract:
     per-round separately-jitted run_round, numpy store gather/scatter
-    (incl. the uplink error-feedback residuals under an active codec),
-    cohorts/data/compression keys drawn from the same fold_in(key, t)
-    streams the trainer's scan uses (seed, seed+1, seed+2)."""
-    from repro.core import get_compressor, resolve_compressor
+    (incl. the uplink error-feedback residuals under an active codec and
+    the solver slots under a stateful local solver), cohorts/data/
+    compression keys drawn from the same fold_in(key, t) streams the
+    trainer's scan uses (seed, seed+1, seed+2).
+
+    Returns ``(server, stores, hist)`` where ``stores`` has exactly the
+    trainer's device-store layout — the bare c_i tree, or the
+    ``{"c_i"[, "residual"][, "solver"]}`` dict — so call sites compare
+    it against ``trainer.device_store`` wholesale."""
+    from repro.core import (
+        ClientStateStore,
+        get_compressor,
+        get_local_solver,
+        resolve_compressor,
+        resolve_local_solver,
+    )
     from repro.core.compression import resolve_downlink
+    from repro.core.tree import tree_cast
 
     grad_fn = make_grad_fn(quadratic_loss)
     data = ds.device_data()
     bf = jax.jit(ds.device_batch_fn(spec.local_steps, spec.local_batch))
     skey, dkey = jax.random.key(seed), jax.random.key(seed + 1)
     comp = get_compressor(resolve_compressor(spec))
+    solver = get_local_solver(resolve_local_solver(spec))
     keyed = (comp.needs_key
              or get_compressor(resolve_downlink(spec)).needs_key)
     ckey = jax.random.key(seed + 2) if keyed else None
@@ -93,26 +111,44 @@ def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
     rj = jax.jit(lambda s, c, b, k: run_round(
         grad_fn, spec, s, c, b, use_fused_update=use_fused_update,
         comp_key=k))
-    server = init_server_state(spec, _init_params(None))
-    store = np.zeros((spec.num_clients, DIM), np.float32)
-    res_store = (np.zeros((spec.num_clients, DIM), np.float32)
+    params = _init_params(None)
+    server = init_server_state(spec, params)
+    c_store = ClientStateStore(params, spec.num_clients)
+    res_store = (ClientStateStore(tree_cast(params, jnp.float32),
+                                  spec.num_clients)
                  if comp.stateful else None)
+    slot_store = (ClientStateStore(solver.init(spec, params),
+                                   spec.num_clients)
+                  if solver.stateful else None)
     hist = []
     for t in range(rounds):
         ids = np.asarray(samp(skey, t))
         batches = bf(data, jnp.asarray(ids), jax.random.fold_in(dkey, t))
         clients = ClientRoundState(
-            c_i={"x": jnp.asarray(store[ids])},
-            uplink_residual=({"x": jnp.asarray(res_store[ids])}
-                             if res_store is not None else None))
+            c_i=jax.tree.map(jnp.asarray, c_store.gather(ids)),
+            uplink_residual=(jax.tree.map(jnp.asarray, res_store.gather(ids))
+                             if res_store is not None else None),
+            solver_slots=(jax.tree.map(jnp.asarray, slot_store.gather(ids))
+                          if slot_store is not None else None))
         out = rj(server, clients, batches,
                  jax.random.fold_in(ckey, t) if keyed else None)
         server = out.server
-        store[ids] = np.asarray(out.clients.c_i["x"])
+        c_store.scatter(ids, out.clients.c_i)
         if res_store is not None:
-            res_store[ids] = np.asarray(out.clients.uplink_residual["x"])
+            res_store.scatter(ids, out.clients.uplink_residual)
+        if slot_store is not None:
+            slot_store.scatter(ids, out.clients.solver_slots)
         hist.append({k: float(v) for k, v in out.metrics.items()})
-    return server, store, hist, res_store
+    all_ids = np.arange(spec.num_clients)
+    if res_store is not None or slot_store is not None:
+        stores = {"c_i": c_store.gather(all_ids)}
+        if res_store is not None:
+            stores["residual"] = res_store.gather(all_ids)
+        if slot_store is not None:
+            stores["solver"] = slot_store.gather(all_ids)
+    else:
+        stores = c_store.gather(all_ids)
+    return server, stores, hist
 
 
 @pytest.mark.parametrize("use_fused", [False, True],
@@ -129,7 +165,7 @@ def test_scanned_matches_host_loop(algo, server_opt, use_fused):
     ctx = (fused_ops.force_interpret() if use_fused
            else contextlib.nullcontext())
     with ctx:
-        server_h, store_h, hist_h, _ = _host_loop_device_rng(
+        server_h, stores_h, hist_h = _host_loop_device_rng(
             spec, ds, ROUNDS, use_fused_update=use_fused)
         tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
                               scan_rounds=ROUNDS, use_fused_update=use_fused)
@@ -138,7 +174,7 @@ def test_scanned_matches_host_loop(algo, server_opt, use_fused):
     _assert_tree_equal(server_h.x, tr.x)
     _assert_tree_equal(server_h.c, tr.c)
     _assert_tree_equal(server_h.opt_state, tr.server.opt_state)
-    _assert_tree_equal({"x": store_h}, tr.device_store)
+    _assert_tree_equal(stores_h, tr.device_store)
     assert hist_h == [{k: v for k, v in h.items() if k != "round"}
                       for h in tr.history]
 
@@ -176,9 +212,9 @@ def test_run_rounds_direct_api():
         sample_key=jax.random.key(0), data_key=jax.random.key(1))
     assert metrics["loss"].shape == (5,)
     assert store2["x"].shape == (N, DIM)
-    server_h, store_h, hist_h, _ = _host_loop_device_rng(spec, ds, 5)
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, 5)
     _assert_tree_equal(server_h.x, server2.x)
-    _assert_tree_equal({"x": store_h}, store2)
+    _assert_tree_equal(stores_h, store2)
     np.testing.assert_array_equal(
         np.asarray(metrics["loss"]),
         np.asarray([h["loss"] for h in hist_h], np.float32))
@@ -269,21 +305,18 @@ def test_scanned_matches_host_loop_compressed(codec, algo):
     spec = _spec(algo, "sgd", compress=codec, compress_k=3)
     assert spec.compress_uplink == (codec != "none")
     ds = _dataset()
-    server_h, store_h, hist_h, res_h = _host_loop_device_rng(
-        spec, ds, ROUNDS)
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, ROUNDS)
     tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
                           scan_rounds=ROUNDS)
     assert tr.scan_active, tr.scan_fallback_reason
     tr.run(ROUNDS)
     _assert_tree_equal(server_h.x, tr.x)
     _assert_tree_equal(server_h.c, tr.c)
-    if codec == "none":
-        _assert_tree_equal({"x": store_h}, tr.device_store)
-    else:
-        # residuals live in the device store next to the control variates
-        _assert_tree_equal({"x": store_h}, tr.device_store["c_i"])
-        _assert_tree_equal({"x": res_h}, tr.device_store["residual"])
-        assert np.abs(res_h).sum() > 0, "codec never produced a residual"
+    # residuals live in the device store next to the control variates
+    _assert_tree_equal(stores_h, tr.device_store)
+    if codec != "none":
+        assert np.abs(stores_h["residual"]["x"]).sum() > 0, (
+            "codec never produced a residual")
     assert hist_h == [{k: v for k, v in h.items() if k != "round"}
                       for h in tr.history]
 
@@ -298,14 +331,13 @@ def test_compressed_downlink_runs_scanned_and_matches_host_contract(up,
     spec = _spec("scaffold", "momentum", compress=up, compress_k=2,
                  compress_downlink=down)
     ds = _dataset()
-    server_h, store_h, hist_h, res_h = _host_loop_device_rng(
-        spec, ds, ROUNDS)
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, ROUNDS)
     tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
                           scan_rounds=ROUNDS)
     assert tr.scan_active, tr.scan_fallback_reason
     tr.run(ROUNDS)
     _assert_tree_equal(server_h.x, tr.x)
-    _assert_tree_equal({"x": res_h}, tr.device_store["residual"])
+    _assert_tree_equal(stores_h, tr.device_store)
     assert hist_h == [{k: v for k, v in h.items() if k != "round"}
                       for h in tr.history]
     # downlink cut is visible in the accounting: codec pair < raw fp32 pair
@@ -416,12 +448,159 @@ def test_sgd_whole_batch_scans():
                           scan_rounds=3)
     assert tr.scan_active
     tr.run(3)
-    server_h, store_h, hist_h, _ = _host_loop_device_rng(spec, ds, 3)
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, 3)
     _assert_tree_equal(server_h.x, tr.x)
-    np.testing.assert_array_equal(store_h,
-                                  np.asarray(tr.device_store["x"]))
+    _assert_tree_equal(stores_h, tr.device_store)
     assert hist_h == [{k: v for k, v in h.items() if k != "round"}
                       for h in tr.history]
+
+
+# ---------------------------------------------------------------------------
+# local-solver axis (DESIGN.md §12): every registered LocalSolver runs the
+# scanned engine — stateful solvers' per-client slots are device-store rows
+# ---------------------------------------------------------------------------
+
+SOLVERS = ("sgd", "momentum", "adam", "sgd_sched")
+
+
+def _solver_kw(solver):
+    return dict(local_solver=solver,
+                eta_l_schedule="cosine" if solver == "sgd_sched" else "")
+
+
+@pytest.mark.parametrize("use_fused", [False, True],
+                         ids=["plain", "fused"])
+@pytest.mark.parametrize("algo", ["scaffold", "scaffold_m"])
+@pytest.mark.parametrize("solver", SOLVERS)
+def test_scanned_matches_host_loop_solver(solver, algo, use_fused):
+    """run_rounds(R) with every local solver is bit-for-bit equal to R
+    host-loop rounds on the device RNG contract — server state, the c_i
+    store, the persisted per-client solver slots, and the metrics."""
+    spec = _spec(algo, "sgd", **_solver_kw(solver))
+    ds = _dataset()
+    ctx = (fused_ops.force_interpret() if use_fused
+           else contextlib.nullcontext())
+    with ctx:
+        server_h, stores_h, hist_h = _host_loop_device_rng(
+            spec, ds, ROUNDS, use_fused_update=use_fused)
+        tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                              scan_rounds=ROUNDS, use_fused_update=use_fused)
+        assert tr.scan_active, tr.scan_fallback_reason
+        tr.run(ROUNDS)
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal(server_h.c, tr.c)
+    _assert_tree_equal(stores_h, tr.device_store)
+    if solver in ("momentum", "adam"):
+        # the slots actually accumulated state in the device store
+        m = np.asarray(jax.tree.leaves(tr.device_store["solver"]["m"])[0])
+        assert np.abs(m).sum() > 0, "solver slots never updated"
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+@pytest.mark.parametrize("solver", ["sgd", "momentum"])
+def test_scanned_matches_host_loop_option_I(solver):
+    """scaffold_option="I" (the extra grad pass at x) crosses the scanned
+    equivalence matrix — previously only Option II did — and composes
+    with the solver axis."""
+    spec = _spec("scaffold", "sgd", scaffold_option="I",
+                 **_solver_kw(solver))
+    ds = _dataset()
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, ROUNDS)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=ROUNDS)
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(ROUNDS)
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal(server_h.c, tr.c)
+    _assert_tree_equal(stores_h, tr.device_store)
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+def test_scanned_matches_host_loop_solver_with_compression():
+    """Stateful solver + stateful codec: the device store carries all
+    three row families ({c_i, residual, solver}) through the scan,
+    bit-for-bit equal to the host-driven loop."""
+    spec = _spec("scaffold", "sgd", compress="int8_ef",
+                 **_solver_kw("momentum"))
+    ds = _dataset()
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, ROUNDS)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=ROUNDS)
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(ROUNDS)
+    assert set(tr.device_store) == {"c_i", "residual", "solver"}
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal(stores_h, tr.device_store)
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+
+
+@pytest.mark.parametrize("chunks", [(1,) * 6, (2, 4), (4, 2)])
+def test_chunk_size_invariance_solver_slots(chunks):
+    """Per-client solver slots carried through the scanned store survive
+    any chunking: 6 rounds in one scan == the same 6 rounds in smaller
+    chunks, bitwise, slots included."""
+    spec = _spec("scaffold", "momentum", **_solver_kw("adam"))
+    ds = _dataset()
+    ref = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                           scan_rounds=6)
+    ref.run(6)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=max(chunks))
+    for c in chunks:
+        tr._run_scan_chunk(c)
+    _assert_tree_equal(ref.x, tr.x)
+    _assert_tree_equal(ref.device_store, tr.device_store)
+    assert ref.history == tr.history
+
+
+def test_checkpoint_resume_mid_chunk_solver_slots(tmp_path):
+    """Mid-chunk checkpoint-resume with per-client solver slots in the
+    device store: save after 7 rounds (scan_rounds=5 runs 5+2), restore
+    into a fresh trainer, continue — bitwise equal to the unbroken
+    12-round run, including the restored slot rows."""
+    spec = _spec("scaffold", "adam", **_solver_kw("adam"))
+    ds = _dataset()
+    unbroken = FederatedTrainer(quadratic_loss, _init_params, spec, ds,
+                                seed=0, scan_rounds=5)
+    unbroken.run(12)
+    a = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=5)
+    a.run(7)
+    path = str(tmp_path / "ck.npz")
+    save_trainer(path, a)
+    a.sync_host_store()
+    assert np.abs(np.asarray(
+        a.solver_store.gather(np.arange(N))["m"]["x"])).sum() > 0
+    b = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=5)
+    load_trainer(path, b)
+    assert b.round_idx == 7
+    _assert_tree_equal(a.device_store["solver"], b.device_store["solver"])
+    b.run(5)
+    _assert_tree_equal(unbroken.x, b.x)
+    _assert_tree_equal(unbroken.server.opt_state, b.server.opt_state)
+    _assert_tree_equal(unbroken.device_store, b.device_store)
+
+
+def test_solver_checkpoint_crosses_engines(tmp_path):
+    """A scan-mode checkpoint with solver slots restores into a host-loop
+    trainer: slot rows ride the same host .npz keys in every mode."""
+    spec = _spec("scaffold", "sgd", **_solver_kw("momentum"))
+    ds = _dataset()
+    a = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                         scan_rounds=4)
+    a.run(4)
+    path = str(tmp_path / "ck.npz")
+    save_trainer(path, a)
+    host = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0)
+    load_trainer(path, host)
+    _assert_tree_equal(a.x, host.x)
+    a.sync_host_store()
+    _assert_tree_equal(a.solver_store.gather(np.arange(N)),
+                       host.solver_store.gather(np.arange(N)))
 
 
 def test_run_aligns_chunks_to_eval_boundaries():
