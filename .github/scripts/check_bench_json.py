@@ -33,6 +33,24 @@ def check(path: str) -> None:
             assert record["mode"] == "scanned", record
             assert record["rounds_per_s"] > 0, record
             assert isinstance(record["stateful"], bool), record
+    if payload["bench"] == "store":
+        kinds = {record["store"] for record in records}
+        assert {"dense", "tiered"} <= kinds, kinds  # both tiers measured
+        for record in records:
+            assert record["mode"] == "scanned", record
+            assert record["rounds_per_s"] > 0, record
+            assert record["row_bytes"] > 0, record
+            assert record["population_bytes"] > 0, record
+            if record["store"] == "tiered":
+                # acceptance: peak device client-store bytes bounded by
+                # the cohort-union capacity, never by N
+                assert record["device_store_bytes"] == (
+                    record["cohort_rows"] * record["row_bytes"]), record
+                assert record["cohort_rows"] <= (
+                    record["scan_chunk"] * record["num_sampled"]), record
+            else:
+                assert record["device_store_bytes"] == (
+                    record["n_clients"] * record["row_bytes"]), record
     if payload["bench"] == "compression":
         codecs = {record["codec"] for record in records}
         assert "none" in codecs, codecs  # the uncompressed baseline row

@@ -1,0 +1,119 @@
+"""Population-scale client-store sweep: dense vs tiered (DESIGN.md §13).
+
+For N up to 10^6+ procedural quadratic clients (O(1) data memory —
+``ProceduralQuadraticDataset``), runs the scanned engine with the dense
+device-resident ``(N, ...)`` client store and with the tiered store
+(population host-side, fixed-capacity HBM cohort buffer, gather-ahead
+depths 1/2/4) and reports
+
+  rounds/s              wall-clock of the scanned chunks,
+  device_store_bytes    peak device-resident client-store bytes — the
+                        acceptance axis: N*row for dense, min(N, R*S)*row
+                        for tiered (bounded by cohort size, not N),
+  population_bytes      what the host-side population occupies in its
+                        StoreBackend tier.
+
+The dense sweep is capped at ``--dense-max-n`` (the whole point is that
+dense cannot scale; the default still measures it at 10^5). Emits one
+``scaffold-bench/v1`` record per (N, store, depth) —
+``python -m benchmarks.bench_store`` writes ``BENCH_store.json``
+(validated by .github/scripts/check_bench_json.py and uploaded by the CI
+bench job; ``--smoke`` is the CI-speed preset).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_argparser, bench_cli
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import ProceduralQuadraticDataset, quadratic_loss
+
+S, K, DIM, CHUNK = 64, 2, 8, 16
+
+
+def bench_config(n: int, *, store: str, prefetch_depth: int, iters: int,
+                 seed: int = 0):
+    ds = ProceduralQuadraticDataset(n, DIM, seed=seed)
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=n,
+                        num_sampled=min(S, n), local_steps=K, local_batch=1,
+                        eta_l=0.1)
+    init = lambda key: {"x": jnp.ones((DIM,), jnp.float32)}
+    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed,
+                          scan_rounds=CHUNK, store=store,
+                          prefetch_depth=prefetch_depth)
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(iters)  # compile the R=CHUNK chunk outside timing
+    t0 = time.perf_counter()
+    tr.run(iters)
+    jax.block_until_ready(tr.x)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    row_bytes = sum(st.row_nbytes for _, st in tr._store_families())
+    rec = {
+        "bench": "store",
+        "n_clients": n,
+        "num_sampled": spec.num_sampled,
+        "store": store,
+        "backend": "dense",
+        "prefetch_depth": prefetch_depth if store == "tiered" else 0,
+        "mode": "scanned",
+        "scan_chunk": CHUNK,
+        "us_per_round": us,
+        "rounds_per_s": 1e6 / max(us, 1e-9),
+        "row_bytes": row_bytes,
+        "cohort_rows": min(n, CHUNK * spec.num_sampled),
+        "device_store_bytes": tr.client_store_device_bytes(),
+        "population_bytes": tr.store.population_nbytes,
+        "final_loss": tr.history[-1]["loss"],
+    }
+    tr.close()
+    return rec
+
+
+def run(*, ns, iters: int, depths=(1, 2, 4), dense_max_n: int = 100_000,
+        seed: int = 0):
+    rows = []
+    for n in ns:
+        configs = [("dense", 0)] if n <= dense_max_n else []
+        configs += [("tiered", d) for d in depths]
+        for store, depth in configs:
+            r = bench_config(n, store=store, prefetch_depth=max(depth, 1),
+                             iters=iters, seed=seed)
+            r["prefetch_depth"] = depth
+            rows.append(r)
+            print(f"store_N{n:>7d}_{store:6s}_d{depth}: "
+                  f"{r['us_per_round']/1e3:7.2f} ms/round "
+                  f"({r['rounds_per_s']:8.0f} rounds/s) | "
+                  f"device {r['device_store_bytes']:>10d} B | "
+                  f"population {r['population_bytes']:>10d} B")
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, iters: int = 64,
+         dense_max_n: int = 100_000):
+    del fast  # scale rides on --smoke/--iters (no --full, like bench_round)
+    if smoke:
+        # CI-speed preset: the tiering behaviour (device bytes bounded by
+        # cohort, gather-ahead depths) is N-independent; keep N small
+        return run(ns=(1_000, 20_000), iters=min(iters, 32),
+                   depths=(1, 2), dense_max_n=dense_max_n)
+    # acceptance sweep: a successful N=10^6 tiered run with peak device
+    # client-store bytes bounded by cohort size, not N
+    return run(ns=(1_000, 100_000, 1_000_000), iters=iters,
+               dense_max_n=dense_max_n)
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed preset (small N, depths 1/2)")
+    ap.add_argument("--iters", type=int, default=64,
+                    help="timed rounds per configuration")
+    ap.add_argument("--dense-max-n", type=int, default=100_000,
+                    help="largest N the dense (N, ...) device store is "
+                         "benchmarked at")
+    bench_cli("store", main, parser=ap,
+              forward=("smoke", "iters", "dense_max_n"))

@@ -6,15 +6,18 @@ Entry points:
   run_rounds       — R rounds as one lax.scan: on-device cohort sampling,
                      device-resident (N, ...) client store, device data
                      gathers (the scanned engine, DESIGN.md §10)
+  run_rounds_cohort — the scan over a cohort-sized device buffer instead
+                     of the (N, ...) store: population rows stay host-side
+                     in the tiered store (core/store.py, DESIGN.md §13)
   federated_round  — back-compat tuple shim over run_round (Algorithm 1/2)
   client_update    — one client's K corrected local steps
   FederatedTrainer — host controller (sampling + stateful-client stores;
                      sync / pipelined / scanned execution modes)
 
-Extensibility (DESIGN.md §9/§11/§12) — four registries, each listable
+Extensibility (DESIGN.md §9/§11/§12/§13) — five registries, each listable
 (``algorithm_names`` / ``server_optimizer_names`` / ``compressor_names``
-/ ``local_solver_names``; ``launch/train.py --list-registries`` prints
-all four):
+/ ``local_solver_names`` / ``store_backend_names``;
+``launch/train.py --list-registries`` prints all five):
   Algorithm / register_algorithm            — per-round algorithm strategy
   ServerOptimizer / register_server_optimizer — server step on the
                                               aggregated delta
@@ -26,6 +29,12 @@ all four):
                                               pytree; stateful solvers
                                               persist per-client slots in
                                               the client store)
+  StoreBackend / register_store_backend     — where the (N, ...) per-client
+                                              population rows live (dense
+                                              RAM / memmap disk / sharded
+                                              hosts; the tiered store
+                                              gathers cohort rows through
+                                              it — DESIGN.md §13)
 """
 from repro.core.api import (  # noqa: F401
     Algorithm,
@@ -41,6 +50,7 @@ from repro.core.api import (  # noqa: F401
     register_server_optimizer,
     resolve_server_optimizer,
     run_rounds,
+    run_rounds_cohort,
     server_optimizer_names,
 )
 from repro.core.compression import (  # noqa: F401
@@ -52,9 +62,20 @@ from repro.core.compression import (  # noqa: F401
     round_comm_bytes,
 )
 from repro.core.controller import (  # noqa: F401
-    ClientStateStore,
     FederatedTrainer,
     make_grad_fn,
+)
+from repro.core.store import (  # noqa: F401
+    ClientStateStore,
+    DenseBackend,
+    MemmapBackend,
+    StoreBackend,
+    TieredClientStore,
+    make_store_backend,
+    refresh_rows,
+    register_store_backend,
+    stale_mask,
+    store_backend_names,
 )
 from repro.core.local_solver import (  # noqa: F401
     LocalSolver,

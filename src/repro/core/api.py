@@ -514,3 +514,95 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
     (server, client_store), metrics = jax.lax.scan(
         body, (server, client_store), ts)
     return server, client_store, metrics
+
+
+def run_rounds_cohort(grad_fn, spec, server: ServerState, cohort_store,
+                      R: int, *, data, batch_fn, round_ids, slot_ids,
+                      data_key, comp_key=None, start_round=0, weights=None,
+                      use_fused_update: bool = False, shard_fn=None):
+    """``run_rounds`` over a *cohort-sized* client-store buffer — the
+    tiered store's scanned engine (DESIGN.md §13).
+
+    ``run_rounds`` keeps the full ``(N, ...)`` client store
+    device-resident; at population scale (N = 10^6+ clients with real
+    params) that store cannot live in HBM. Here the population store
+    stays host-side (``core/store.py``) and the scan only ever touches
+    ``cohort_store`` — the same pytree/dict layout as ``run_rounds``'s
+    store but with leaves ``(U, ...)``, where U is the chunk's fixed
+    cohort-union capacity ``min(N, R*S)`` — so peak device client-store
+    bytes are bounded by cohort size, never by N.
+
+    cohort_store: the chunk's client-state rows, leaves ``(U, ...)``
+                  (dict of row families exactly as in ``run_rounds``).
+                  Rows beyond the chunk's actual union are padding: no
+                  ``slot_ids`` entry points at them, so they are never
+                  read or written and the capacity stays
+                  shape-static (one compile per chunk length R).
+    round_ids:    ``(R, S)`` int32 — round r's *global* cohort ids. The
+                  host precomputes them from the same stateless
+                  ``device_sample_ids`` stream the dense scan folds, so
+                  trajectories are bit-for-bit identical.
+    slot_ids:     ``(R, S)`` int32 — the same cohorts as row indices of
+                  ``cohort_store`` (host-built via ``np.unique``, so a
+                  client resampled across the chunk's rounds maps to one
+                  slot and within-chunk read-after-write matches the
+                  dense store exactly).
+    weights:      optional ``(R, S)`` fp32 aggregation weights — the
+                  host-gathered ``sizes[round_ids]`` (the dense scan
+                  gathers from a device-resident ``(N,)`` sizes array,
+                  which a tiered run must not materialise).
+
+    Global ids only ever reach the data gather (``batch_fn``) and the
+    metrics; every store gather/scatter goes through ``slot_ids``.
+    Returns ``(server, cohort_store, metrics)`` like ``run_rounds``;
+    the caller writes the first-U rows back to the population store.
+    """
+    from repro.core.compression import get_compressor, resolve_compressor
+    from repro.core.local_solver import get_local_solver, resolve_local_solver
+    from repro.core.rounds import run_round
+    from repro.core.tree import tree_gather, tree_scatter
+
+    up = get_compressor(resolve_compressor(spec))
+    solver = get_local_solver(resolve_local_solver(spec))
+    carry_residuals = up.stateful
+    carry_slots = solver.stateful
+    wrapped = carry_residuals or carry_slots
+
+    def body(store_and_server, xs):
+        server, store = store_and_server
+        t, ids, slots = xs["t"], xs["ids"], xs["slots"]
+        batches = batch_fn(data, ids, jax.random.fold_in(data_key, t))
+        gathered = tree_gather(store, slots)
+        clients = ClientRoundState(
+            c_i=gathered["c_i"] if wrapped else gathered,
+            uplink_residual=(gathered["residual"] if carry_residuals
+                             else None),
+            solver_slots=gathered["solver"] if carry_slots else None,
+            weights=xs["w"] if "w" in xs else None,
+        )
+        out = run_round(grad_fn, spec, server, clients, batches,
+                        use_fused_update=use_fused_update, shard_fn=shard_fn,
+                        comp_key=(jax.random.fold_in(comp_key, t)
+                                  if comp_key is not None else None))
+        if wrapped:
+            new_rows = {"c_i": out.clients.c_i}
+            if carry_residuals:
+                new_rows["residual"] = out.clients.uplink_residual
+            if carry_slots:
+                new_rows["solver"] = out.clients.solver_slots
+        else:
+            new_rows = out.clients.c_i
+        store = tree_scatter(store, slots, new_rows)
+        return (out.server, store), out.metrics
+
+    xs = {
+        "t": (jnp.arange(R, dtype=jnp.int32)
+              + jnp.asarray(start_round, jnp.int32)),
+        "ids": jnp.asarray(round_ids, jnp.int32),
+        "slots": jnp.asarray(slot_ids, jnp.int32),
+    }
+    if weights is not None:
+        xs["w"] = jnp.asarray(weights, jnp.float32)
+    (server, cohort_store), metrics = jax.lax.scan(
+        body, (server, cohort_store), xs)
+    return server, cohort_store, metrics

@@ -2,13 +2,15 @@
 
 Owns:
   * the typed ``ServerState`` (x, c, server-optimizer slots) on device,
-  * the *full* N-client host stores (numpy, one slot per client — the
-    paper's "stateful clients"): control variates, plus uplink
-    error-feedback residuals when an uplink codec is active
-    (``spec.compress`` — DESIGN.md §11), plus local-solver slots when
-    the spec's ``local_solver`` is stateful (momentum/adam —
-    DESIGN.md §12; in scan mode all of these live in the
-    device-resident store and the host stores are checkpoint mirrors),
+  * the *full* N-client host stores (``core/store.py``, one row per
+    client behind a pluggable ``StoreBackend`` — the paper's "stateful
+    clients"): control variates, plus uplink error-feedback residuals
+    when an uplink codec is active (``spec.compress`` — DESIGN.md §11),
+    plus local-solver slots when the spec's ``local_solver`` is stateful
+    (momentum/adam — DESIGN.md §12; in dense scan mode all of these live
+    in the device-resident store and the host stores are checkpoint
+    mirrors; ``store="tiered"`` keeps the population host-side in every
+    mode and gathers only cohort rows to the device — DESIGN.md §13),
   * the sampler and the per-round gather/scatter of sampled clients'
     round state (``ClientRoundState``),
   * the jitted typed round function (``core/rounds.run_round``).
@@ -47,7 +49,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from collections import deque
+from collections import OrderedDict, deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
@@ -59,6 +62,7 @@ from repro.core.api import (
     get_algorithm,
     init_server_state,
     run_rounds,
+    run_rounds_cohort,
 )
 from repro.core.compression import (
     get_compressor,
@@ -71,8 +75,16 @@ from repro.core.rounds import run_round
 from repro.core.sampling import (
     ClientSampler,
     DeviceClientSampler,
+    device_sample_ids,
     key_from_state,
     key_state,
+)
+from repro.core.store import (  # noqa: F401  (ClientStateStore re-exported)
+    ClientStateStore,
+    TieredClientStore,
+    make_store_backend,
+    refresh_rows as _refresh_rows,
+    stale_mask,
 )
 from repro.core.tree import tree_cast
 
@@ -89,38 +101,19 @@ def make_grad_fn(loss_fn: Callable) -> Callable:
     return grad_fn
 
 
-class ClientStateStore:
-    """Host store of one per-client state pytree for all N clients
-    (numpy-backed; used for control variates and uplink residuals)."""
+class _ChunkPlan(NamedTuple):
+    """Host-precomputed cohort plan of one tiered scan chunk: the rounds'
+    global cohort ids, their union (the population rows the chunk needs),
+    per-round slots into the cohort buffer, and the buffer's fixed
+    capacity min(N, R*S) (padding keeps compilations per chunk length,
+    exactly like the dense scan — core/store.py / DESIGN.md §13)."""
 
-    def __init__(self, template, num_clients: int):
-        self.num_clients = num_clients
-        self._leaves, self._treedef = jax.tree.flatten(
-            jax.tree.map(
-                lambda a: np.zeros((num_clients,) + a.shape, jax.numpy.asarray(a).dtype),
-                template,
-            )
-        )
-
-    def gather(self, ids: np.ndarray):
-        return jax.tree.unflatten(self._treedef, [l[ids] for l in self._leaves])
-
-    def scatter(self, ids: np.ndarray, new):
-        new_leaves = jax.tree.leaves(new)
-        for store_leaf, new_leaf in zip(self._leaves, new_leaves):
-            store_leaf[ids] = np.asarray(new_leaf)
-
-    def mean(self):
-        return jax.tree.unflatten(
-            self._treedef, [l.mean(axis=0) for l in self._leaves]
-        )
-
-
-def _refresh_rows(prefetched, fresh, stale: np.ndarray) -> None:
-    """Overwrite the stale rows of a prefetched (mutable numpy) gather."""
-    for leaf, fresh_leaf in zip(jax.tree.leaves(prefetched),
-                                jax.tree.leaves(fresh)):
-        leaf[stale] = fresh_leaf
+    t0: int
+    rounds: int
+    round_ids: np.ndarray  # (R, S) int32, global ids
+    union: np.ndarray      # (u,) unique global ids, u <= capacity
+    slot_ids: np.ndarray   # (R, S) int32, rows of the cohort buffer
+    capacity: int
 
 
 class _RoundInputs(NamedTuple):
@@ -155,13 +148,25 @@ class FederatedTrainer:
     rounds (``run_rounds`` — requires the dataset's device-data protocol:
     ``device_data()`` + ``device_batch_fn(K, b)``); incompatible configs
     fall back to the host loop and record why in ``scan_fallback_reason``.
+
+    ``store="tiered"`` keeps the ``(N, ...)`` population stores host-side
+    behind ``store_backend`` ("dense" RAM / "memmap" disk / "sharded") in
+    every mode, with ``prefetch_depth`` chunks of gather-ahead; under the
+    scanned engine the device then only ever holds the chunk's
+    cohort-union buffer — min(N, R*S) rows — instead of the full (N, ...)
+    store (DESIGN.md §13). Trajectories are bit-for-bit the dense
+    store's (tests/test_store.py).
     """
 
     def __init__(self, loss_fn, init_params, spec, dataset, *, seed: int = 0,
                  use_fused_update: bool = False, donate: bool = True,
-                 pipeline_depth: int = 0, scan_rounds: int = 0):
+                 pipeline_depth: int = 0, scan_rounds: int = 0,
+                 store: str = "dense", store_backend: str = "",
+                 prefetch_depth: int = 2):
         assert pipeline_depth >= 0, pipeline_depth
         assert scan_rounds >= 0, scan_rounds
+        assert store in ("dense", "tiered"), store
+        assert prefetch_depth >= 1, prefetch_depth
         self.spec = spec
         self.dataset = dataset
         self.algorithm = get_algorithm(spec.algorithm)
@@ -171,15 +176,31 @@ class FederatedTrainer:
                 "client_sizes(ids); add it or disable weighting")
         key = jax.random.key(seed)
         self.server = init_server_state(spec, init_params(key))
-        self.store = ClientStateStore(self.server.x, spec.num_clients)
+        # tiered population store (DESIGN.md §13): rows live host-side in a
+        # pluggable StoreBackend; one worker thread serialises all backend
+        # I/O across the row families so gather-ahead repairs stay ordered
+        self.store_kind = store
+        self.prefetch_depth = int(prefetch_depth)
+        self._store_exec: Optional[ThreadPoolExecutor] = None
+        if store == "tiered":
+            self._store_exec = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="tiered-store")
+            make_store = lambda tmpl: TieredClientStore(  # noqa: E731
+                tmpl, spec.num_clients,
+                backend=make_store_backend(store_backend or "dense"),
+                prefetch_depth=self.prefetch_depth,
+                executor=self._store_exec)
+        else:
+            make_store = lambda tmpl: ClientStateStore(  # noqa: E731
+                tmpl, spec.num_clients, backend=store_backend or "dense")
+        self.store = make_store(self.server.x)
         # uplink error-feedback residuals persist per client across rounds
         # (fp32; gated on the codec's ``stateful`` — the same predicate
         # run_rounds uses for the device-store layout, so a registered
         # stateless codec needs no residual rows anywhere)
         self.compressor = get_compressor(resolve_compressor(spec))
         self.residual_store = (
-            ClientStateStore(tree_cast(self.server.x, jnp.float32),
-                             spec.num_clients)
+            make_store(tree_cast(self.server.x, jnp.float32))
             if self.compressor.stateful else None)
         # stateful local solvers (momentum/adam) persist per-client slots
         # across rounds, exactly like the control variates / residuals:
@@ -187,8 +208,7 @@ class FederatedTrainer:
         # store under the scanned engine (DESIGN.md §12)
         self.local_solver = get_local_solver(resolve_local_solver(spec))
         self.solver_store = (
-            ClientStateStore(self.local_solver.init(spec, self.server.x),
-                             spec.num_clients)
+            make_store(self.local_solver.init(spec, self.server.x))
             if self.local_solver.stateful else None)
         self.sampler = ClientSampler(spec.num_clients, spec.num_sampled, seed)
         self._rng = np.random.default_rng(seed + 1)
@@ -231,6 +251,7 @@ class FederatedTrainer:
                 warnings.warn(
                     f"scan_rounds={scan_rounds} requested but running the "
                     f"host loop: {self.scan_fallback_reason}", stacklevel=2)
+        self._tiered_scan = False
         if self.scan_rounds > 0 and self.scan_fallback_reason is None:
             self._scan_mode = True
             # device RNG streams mirror the host pair (sampler=seed,
@@ -242,6 +263,39 @@ class FederatedTrainer:
             self._device_data = dataset.device_data()
             self._device_batch_fn = dataset.device_batch_fn(
                 spec.local_steps, spec.local_batch)
+            batch_fn = self._device_batch_fn
+            self._host_store_dirty = False
+            self._tiered_scan = self.store_kind == "tiered"
+        if self._tiered_scan:
+            # tiered scanned engine (DESIGN.md §13): the population rows
+            # stay host-side in self.store/residual_store/solver_store;
+            # each chunk gathers only its cohort union — at most
+            # min(N, R*S) rows — into a fixed-capacity device buffer
+            # (run_rounds_cohort). Chunk plans and population reads are
+            # prefetched on the store worker while the device computes.
+            self._store_wrapped = (self.residual_store is not None
+                                   or self.solver_store is not None)
+            self._sizes_host = (
+                np.asarray(dataset.device_client_sizes(), np.float32)
+                if spec.weighted_aggregation else None)
+            self._plan_futures: OrderedDict = OrderedDict()
+
+            def cohort_fn(server, cohort, data, round_ids, slot_ids,
+                          data_key, comp_key, weights, t0, R):
+                return run_rounds_cohort(
+                    grad_fn, spec, server, cohort, R, data=data,
+                    batch_fn=batch_fn, round_ids=round_ids,
+                    slot_ids=slot_ids, data_key=data_key, comp_key=comp_key,
+                    start_round=t0, weights=weights,
+                    use_fused_update=use_fused_update)
+
+            # R is static (one compile per distinct chunk length — the
+            # cohort capacity min(N, R*S) is a pure function of R, so the
+            # buffer shape is static too); t0 is traced
+            self._cohort_fn = jax.jit(
+                cohort_fn, static_argnums=(9,),
+                donate_argnums=(0, 1) if donate else ())
+        elif self._scan_mode:
             self._device_sizes = (
                 jnp.asarray(dataset.device_client_sizes())
                 if spec.weighted_aggregation else None)
@@ -267,8 +321,6 @@ class FederatedTrainer:
                         self.local_solver.init(spec, self.server.x))
             else:
                 self.device_store = c_store
-            self._host_store_dirty = False
-            batch_fn = self._device_batch_fn
 
             def chunk_fn(server, store, data, sample_key, data_key,
                          comp_key, sizes, t0, R):
@@ -353,6 +405,8 @@ class FederatedTrainer:
 
     def set_host_rng_state(self, state: Dict[str, Any]) -> None:
         self._prefetch.clear()
+        if self._tiered_scan:
+            self._drop_tiered_prefetch()
         self.sampler.set_state(state["sampler"])
         self._rng.bit_generator.state = state["data_rng"]
         if "comp_key" in state:
@@ -386,8 +440,10 @@ class FederatedTrainer:
     def _refresh_stale_rows(self, inputs: _RoundInputs,
                             ids_written: np.ndarray) -> None:
         """Re-gather the rows of a prefetched c_i / residual gather that a
-        scatter just overwrote, restoring gather-at-launch-time semantics."""
-        stale = np.isin(inputs.ids, ids_written)
+        scatter just overwrote, restoring gather-at-launch-time semantics
+        (the repair primitives live in core/store.py and are unit-tested
+        there — tests/test_store_properties.py)."""
+        stale = stale_mask(inputs.ids, ids_written)
         if not stale.any():
             return
         stale_ids = inputs.ids[stale]
@@ -424,12 +480,52 @@ class FederatedTrainer:
     # scanned engine (DESIGN.md §10): device store residency + chunks
     # ------------------------------------------------------------------
 
+    def _store_families(self):
+        """The trainer's per-client row families as (name, store) pairs —
+        names matching the scanned engines' store-dict keys."""
+        fams = [("c_i", self.store)]
+        if self.residual_store is not None:
+            fams.append(("residual", self.residual_store))
+        if self.solver_store is not None:
+            fams.append(("solver", self.solver_store))
+        return fams
+
+    def client_store_device_bytes(self,
+                                  chunk_rounds: Optional[int] = None) -> int:
+        """Peak device-resident client-store bytes of this trainer's
+        execution mode: the full ``(N, ...)`` store under the dense
+        scanned engine; the fixed cohort-union capacity ``min(N, R*S)``
+        under the tiered scanned engine (``chunk_rounds`` overrides the
+        constructor's ``scan_rounds``); one gathered cohort per in-flight
+        round under the host loop (pipelined: depth+1 cohorts)."""
+        row = sum(st.row_nbytes for _, st in self._store_families())
+        N, S = self.spec.num_clients, self.spec.num_sampled
+        if self._tiered_scan:
+            return min(N, (chunk_rounds or self.scan_rounds) * S) * row
+        if self._scan_mode:
+            return N * row
+        return S * row * (self.pipeline_depth + 1)
+
+    def close(self) -> None:
+        """Release store resources (the tiered store's worker thread,
+        memmap files). Idempotent; the trainer is unusable afterwards."""
+        for _, st in self._store_families():
+            st.close()
+        if self._store_exec is not None:
+            self._store_exec.shutdown(wait=True)
+            self._store_exec = None
+
     def sync_host_store(self) -> None:
         """Mirror the device-resident client store (control variates +
         uplink residuals when compressing + solver slots for stateful
         local solvers) into the host stores. Checkpointing reads the
         host stores; no-op outside scan mode or when the mirror is
-        current."""
+        current. Under the tiered scan the population already lives in
+        the host stores — syncing means draining the async writebacks."""
+        if self._tiered_scan:
+            for _, st in self._store_families():
+                st.flush()
+            return
         if self._scan_mode and self._host_store_dirty:
             all_ids = np.arange(self.spec.num_clients)
             dev = jax.tree.map(np.asarray, self.device_store)
@@ -443,9 +539,26 @@ class FederatedTrainer:
                 self.store.scatter(all_ids, dev)
             self._host_store_dirty = False
 
+    def _drop_tiered_prefetch(self) -> None:
+        """Invalidate the tiered scan's gather-ahead state: wait out the
+        in-flight plan tasks (so no late prefetch lands afterwards), then
+        drop every prefetched read. Used on checkpoint restore — the
+        deterministic cohort stream restarts from the restored round."""
+        plans, self._plan_futures = self._plan_futures, OrderedDict()
+        for fut in plans.values():
+            fut.result()
+        for _, st in self._store_families():
+            st.drop_prefetches()
+
     def push_host_store_to_device(self) -> None:
         """Reload the device store from the host stores after a checkpoint
-        restore scattered into them (checkpoint.load_trainer)."""
+        restore scattered into them (checkpoint.load_trainer). Under the
+        tiered scan the host stores *are* the population — there is no
+        (N, ...) device store to reload, only stale gather-ahead state to
+        invalidate."""
+        if self._tiered_scan:
+            self._drop_tiered_prefetch()
+            return
         if self._scan_mode:
             all_ids = np.arange(self.spec.num_clients)
             c_store = jax.tree.map(jnp.asarray, self.store.gather(all_ids))
@@ -461,16 +574,109 @@ class FederatedTrainer:
                 self.device_store = c_store
             self._host_store_dirty = False
 
+    # -- tiered scanned engine (DESIGN.md §13) -------------------------
+
+    def _plan_chunk(self, t0: int, R: int) -> _ChunkPlan:
+        """Deterministic cohort plan for rounds [t0, t0+R): global cohort
+        ids drawn from the *same* stateless ``device_sample_ids`` stream
+        the dense scan folds (bit-for-bit identical cohorts), their
+        union, and per-round slots into the fixed-capacity buffer."""
+        key, N, S = (self.device_sampler.key, self.spec.num_clients,
+                     self.spec.num_sampled)
+        ids = jax.vmap(lambda t: device_sample_ids(key, t, N, S))(
+            jnp.arange(t0, t0 + R, dtype=jnp.int32))
+        round_ids = np.asarray(ids, np.int32)
+        union, inv = np.unique(round_ids, return_inverse=True)
+        return _ChunkPlan(
+            t0=t0, rounds=R, round_ids=round_ids,
+            union=union.astype(np.int64),
+            slot_ids=inv.reshape(round_ids.shape).astype(np.int32),
+            capacity=min(N, R * S))
+
+    def _plan_and_prefetch(self, t0: int, R: int) -> _ChunkPlan:
+        """Runs on the store worker: plan the chunk, then queue the
+        population reads of its union rows under token (t0, R) — reads
+        execute next on the same worker, i.e. while the device computes
+        the current chunk, never blocking the dispatch thread."""
+        plan = self._plan_chunk(t0, R)
+        for _, st in self._store_families():
+            st.prefetch((t0, R), plan.union)
+        return plan
+
+    def _queue_prefetch(self, t0: int, R: int) -> None:
+        """Gather-ahead: queue plan+read tasks for the next
+        ``prefetch_depth`` chunks, assuming run()'s chunking keeps length
+        R (a mispredicted chunk start just falls back to a synchronous
+        plan + gather in ``_run_tiered_chunk``)."""
+        for i in range(self.prefetch_depth):
+            token = (t0 + i * R, R)
+            if token not in self._plan_futures:
+                self._plan_futures[token] = self._store_exec.submit(
+                    self._plan_and_prefetch, *token)
+        while len(self._plan_futures) > self.prefetch_depth:
+            self._plan_futures.popitem(last=False)  # plans are read-only
+
+    @staticmethod
+    def _pad_rows(rows, u: int, capacity: int):
+        """Pad gathered union rows (u, ...) to the buffer capacity. Pad
+        slots are never referenced by slot_ids nor written back."""
+        if u == capacity:
+            return rows
+        return jax.tree.map(
+            lambda l: np.concatenate(
+                [l, np.zeros((capacity - u,) + l.shape[1:], l.dtype)]),
+            rows)
+
+    def _run_tiered_chunk(self, R: int):
+        """One cohort-buffered scan chunk: take the (prefetched) union
+        rows, run ``run_rounds_cohort`` on device, queue the next chunks'
+        gather-ahead while the device computes, then write the dirty
+        union rows back asynchronously."""
+        t0 = self.round_idx
+        token = (t0, R)
+        fut = self._plan_futures.pop(token, None)
+        plan = fut.result() if fut is not None else self._plan_chunk(t0, R)
+        u = len(plan.union)
+        fams = self._store_families()
+        cohort = {name: self._pad_rows(st.take(token, plan.union), u,
+                                       plan.capacity)
+                  for name, st in fams}
+        if not self._store_wrapped:
+            cohort = cohort["c_i"]
+        cohort = jax.tree.map(jnp.asarray, cohort)  # device buffer (donated)
+        weights = (self._sizes_host[plan.round_ids]
+                   if self._sizes_host is not None else None)
+        server, cohort, metrics = self._cohort_fn(
+            self.server, cohort, self._device_data, plan.round_ids,
+            plan.slot_ids, self._data_base_key,
+            self._comp_base_key if self._comp_keyed else None,
+            weights, t0, R)
+        self.server = server
+        # gather-ahead for the next chunks while the device crunches this
+        # one (async dispatch: nothing above blocked on the chunk yet)
+        self._queue_prefetch(t0 + R, R)
+        # first sync point: materialise the chunk's store rows, then hand
+        # the dirty union rows to the async writeback queue
+        out_rows = jax.tree.map(np.asarray, cohort)
+        for name, st in fams:
+            rows = out_rows[name] if self._store_wrapped else out_rows
+            st.scatter_async(plan.union,
+                             jax.tree.map(lambda l: l[:u], rows))
+        return metrics
+
     def _run_scan_chunk(self, R: int):
         """Execute R rounds as one on-device scan; returns the R per-round
         metric dicts (also appended to ``history``)."""
-        server, store, metrics = self._scan_fn(
-            self.server, self.device_store, self._device_data,
-            self.device_sampler.key, self._data_base_key,
-            self._comp_base_key if self._comp_keyed else None,
-            self._device_sizes, self.round_idx, R)
-        self.server, self.device_store = server, store
-        self._host_store_dirty = True
+        if self._tiered_scan:
+            metrics = self._run_tiered_chunk(R)
+        else:
+            server, store, metrics = self._scan_fn(
+                self.server, self.device_store, self._device_data,
+                self.device_sampler.key, self._data_base_key,
+                self._comp_base_key if self._comp_keyed else None,
+                self._device_sizes, self.round_idx, R)
+            self.server, self.device_store = server, store
+            self._host_store_dirty = True
         stacked = {k: np.asarray(v) for k, v in metrics.items()}
         out = []
         for r in range(R):

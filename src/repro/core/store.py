@@ -1,0 +1,438 @@
+"""Tiered population-scale client store (DESIGN.md §13).
+
+SCAFFOLD's defining cost is the per-client control variate c_i: the
+state that scales with the *population* N, not with the model or the
+sampled cohort S (Karimireddy et al. 2020 target cross-device settings
+with huge N and tiny S; the client-sampling re-analysis arXiv:2503.07594
+reaffirms that c_i is the scaling axis). A dense `(N, ...)` store —
+host numpy in the sync/pipelined modes, device-resident in the scanned
+engine — is fine at N=10^3 and impossible at N=10^6+ with real params.
+
+This module is the storage layer that makes "millions of clients" a
+runnable configuration:
+
+  ``StoreBackend``       where the `(N, ...)` population rows physically
+                         live — a tiny allocate/read_rows/write_rows
+                         protocol with a registry mirroring the other
+                         four (Algorithm / ServerOptimizer / Compressor /
+                         LocalSolver). Built-ins: ``dense`` (host RAM
+                         numpy), ``memmap`` (disk-backed numpy, host RAM
+                         ~0), ``sharded`` (``repro.dist.store``: rows
+                         block-partitioned across logical hosts).
+  ``ClientStateStore``   the host store of one per-client state pytree
+                         for all N clients, now backend-parameterised
+                         (moved here from ``core/controller.py``).
+                         Ownership is explicit: **copy-on-gather** —
+                         see the class docstring.
+  ``TieredClientStore``  the gather-ahead tier: a single-worker async
+                         executor funnels all backend I/O, so the host
+                         can *prefetch* the next cohort's rows and
+                         *write back* the previous cohort's dirty rows
+                         while the device computes the current round.
+                         Prefetched rows overwritten by an in-flight
+                         writeback are repaired at consume time with
+                         the same stale-row invariant the pipelined
+                         controller uses (``refresh_rows`` below —
+                         extracted from the controller so the hazard
+                         class is unit-testable directly).
+
+The scanned engine's tiered mode (``core/api.run_rounds_cohort``) pairs
+this with a fixed-capacity HBM cohort buffer: only the union of a
+chunk's cohorts — at most min(N, R*S) rows — ever touches the device.
+
+Staleness-repair invariant (asserted by tests/test_store_properties.py):
+a prefetched gather consumed at time t must equal a synchronous gather
+at time t. The single worker serialises backend I/O, so a *synchronous*
+gather submitted after a write observes it; an *asynchronous* prefetch
+issued before the write is repaired instead: every ``scatter_async``
+records its row ids against all in-flight prefetches, and ``take``
+re-reads exactly the intersecting rows. Evicting a prefetch entry is
+always safe — entries are read-only copies; dirty rows only ever live
+in the write queue and the backend, so eviction can never drop an
+unwritten row.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+from collections import OrderedDict, deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# the StoreBackend protocol + registry
+# ---------------------------------------------------------------------------
+
+
+class StoreBackend:
+    """Where the `(N, ...)` population rows physically live.
+
+    One instance per ``ClientStateStore`` (backends own memory / files —
+    unlike the stateless strategy registries, the registry here maps
+    names to *factories*). The contract, asserted by the property tests:
+
+      * ``allocate(num_rows, shape, dtype)`` returns an opaque
+        zero-initialised leaf handle for ``(num_rows,) + shape`` rows.
+      * ``read_rows(handle, ids)`` returns an **owned copy** — never a
+        view of backend memory (callers mutate gathered rows in place
+        during stale-row repair).
+      * ``write_rows(handle, ids, rows)`` copies the values in — the
+        caller keeps ownership of ``rows``.
+    """
+
+    name: str = ""
+
+    def allocate(self, num_rows: int, shape: Tuple[int, ...], dtype) -> Any:
+        raise NotImplementedError
+
+    def read_rows(self, handle, ids: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def write_rows(self, handle, ids: np.ndarray, rows: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def nbytes(self, handle) -> int:
+        """Bytes the handle occupies in this backend's tier."""
+        return int(handle.nbytes)
+
+    def close(self) -> None:
+        """Release backing resources (files, shards). Idempotent."""
+
+
+class DenseBackend(StoreBackend):
+    """Host-RAM numpy arrays — the seed behaviour, and the default."""
+
+    name = "dense"
+
+    def allocate(self, num_rows, shape, dtype):
+        return np.zeros((num_rows,) + tuple(shape), dtype)
+
+    def read_rows(self, handle, ids):
+        # numpy advanced indexing: a fresh owned array, never a view
+        return handle[ids]
+
+    def write_rows(self, handle, ids, rows):
+        handle[ids] = rows
+
+
+class MemmapBackend(StoreBackend):
+    """Disk-backed numpy (`np.memmap`): the population store's host-RAM
+    footprint drops to the OS page cache's working set — the single-host
+    answer to N=10^6+ rows of real-model params. Files live in
+    ``directory`` (default: a self-cleaning temp dir)."""
+
+    name = "memmap"
+
+    def __init__(self, directory: str = ""):
+        self._tmp = None
+        if not directory:
+            self._tmp = tempfile.TemporaryDirectory(prefix="repro-store-")
+            directory = self._tmp.name
+        self.directory = directory
+        self._maps: List[np.memmap] = []
+
+    def allocate(self, num_rows, shape, dtype):
+        path = os.path.join(self.directory, f"leaf{len(self._maps)}.bin")
+        mm = np.lib.format.open_memmap(
+            path, mode="w+", dtype=np.dtype(dtype),
+            shape=(num_rows,) + tuple(shape))
+        mm[...] = 0
+        self._maps.append(mm)
+        return mm
+
+    def read_rows(self, handle, ids):
+        # advanced indexing on a memmap materialises an owned RAM copy
+        return np.asarray(handle[ids])
+
+    def write_rows(self, handle, ids, rows):
+        handle[ids] = rows
+
+    def close(self):
+        for mm in self._maps:
+            del mm
+        self._maps.clear()
+        if self._tmp is not None:
+            self._tmp.cleanup()
+            self._tmp = None
+
+
+_STORE_BACKENDS: Dict[str, Callable[..., StoreBackend]] = {}
+
+
+def register_store_backend(name: str,
+                           factory: Callable[..., StoreBackend]) -> None:
+    """Register a backend *factory* (called once per store)."""
+    assert name, "store backends must be registered under a name"
+    _STORE_BACKENDS[name] = factory
+
+
+def _ensure_builtin_backends() -> None:
+    # the sharded backend lives in the dist layer (it models the
+    # cross-host population partitioning); import lazily to register
+    if "sharded" not in _STORE_BACKENDS:
+        from repro.dist import store as _dist_store  # noqa: F401
+
+
+def make_store_backend(name: str, **kwargs) -> StoreBackend:
+    _ensure_builtin_backends()
+    try:
+        factory = _STORE_BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown store backend {name!r}; registered: "
+            f"{store_backend_names()}") from None
+    return factory(**kwargs)
+
+
+def store_backend_names() -> Tuple[str, ...]:
+    _ensure_builtin_backends()
+    return tuple(sorted(_STORE_BACKENDS))
+
+
+register_store_backend("dense", DenseBackend)
+register_store_backend("memmap", MemmapBackend)
+
+
+# ---------------------------------------------------------------------------
+# stale-row repair (extracted from core/controller.py — the hazard class
+# the pipelined path repairs, now unit-testable directly)
+# ---------------------------------------------------------------------------
+
+
+def stale_mask(ids: np.ndarray, ids_written: np.ndarray) -> np.ndarray:
+    """Boolean mask over a prefetched gather's ``ids`` marking the rows a
+    later write (``ids_written``) invalidated."""
+    return np.isin(ids, ids_written)
+
+
+def refresh_rows(prefetched, fresh, stale: np.ndarray) -> None:
+    """Overwrite the stale rows of a prefetched gather in place.
+
+    ``prefetched`` leaves are the mutable owned copies ``gather``
+    returns (copy-on-gather is what makes this in-place repair safe);
+    ``fresh`` leaves carry the re-gathered ``stale.sum()`` rows; the
+    result restores gather-at-consume-time semantics."""
+    for leaf, fresh_leaf in zip(jax.tree.leaves(prefetched),
+                                jax.tree.leaves(fresh)):
+        leaf[stale] = fresh_leaf
+
+
+# ---------------------------------------------------------------------------
+# the population store
+# ---------------------------------------------------------------------------
+
+
+class ClientStateStore:
+    """Host store of one per-client state pytree for all N clients
+    (control variates, uplink error-feedback residuals, local-solver
+    slots — one instance per row family), parameterised by a
+    ``StoreBackend`` that decides where the `(N, ...)` rows live.
+
+    Ownership contract (**copy-on-gather**, asserted by the property
+    tests): ``gather`` returns freshly allocated rows the caller owns —
+    mutating them (as the controller's stale-row repair does) never
+    writes through to the population, and later scatters never mutate a
+    previously gathered result. ``scatter`` copies values in; the caller
+    keeps ownership of what it passed.
+    """
+
+    def __init__(self, template, num_clients: int,
+                 backend: "str | StoreBackend" = "dense"):
+        self.num_clients = num_clients
+        self.backend = (backend if isinstance(backend, StoreBackend)
+                        else make_store_backend(backend or "dense"))
+        leaves, self._treedef = jax.tree.flatten(template)
+        self._handles = []
+        self.row_nbytes = 0
+        for leaf in leaves:
+            a = jnp.asarray(leaf)
+            self._handles.append(
+                self.backend.allocate(num_clients, a.shape, a.dtype))
+            self.row_nbytes += int(np.prod(a.shape, dtype=np.int64)
+                                   * np.dtype(a.dtype).itemsize)
+
+    # -- raw backend I/O (subclasses route these through the worker) ----
+
+    def _read(self, ids: np.ndarray):
+        return [self.backend.read_rows(h, ids) for h in self._handles]
+
+    def _write(self, ids: np.ndarray, leaves) -> None:
+        for h, rows in zip(self._handles, leaves):
+            self.backend.write_rows(h, ids, rows)
+
+    # -- public API -----------------------------------------------------
+
+    def gather(self, ids: np.ndarray):
+        """Rows ``ids`` as a pytree of owned ``(len(ids), ...)`` arrays."""
+        return jax.tree.unflatten(self._treedef, self._read(np.asarray(ids)))
+
+    def scatter(self, ids: np.ndarray, new) -> None:
+        """Write rows ``ids``; values are copied in."""
+        self._write(np.asarray(ids),
+                    [np.asarray(l) for l in jax.tree.leaves(new)])
+
+    def mean(self):
+        all_ids = np.arange(self.num_clients)
+        return jax.tree.unflatten(
+            self._treedef, [l.mean(axis=0) for l in self._read(all_ids)])
+
+    @property
+    def population_nbytes(self) -> int:
+        """Bytes the full N-row population occupies in its backend tier."""
+        return sum(self.backend.nbytes(h) for h in self._handles)
+
+    def flush(self) -> None:
+        """Wait until every pending write is durable (no-op here — the
+        base store is synchronous; the tiered store overrides)."""
+
+    def drop_prefetches(self) -> None:
+        """Invalidate any gather-ahead state (no-op on the base store)."""
+
+    def close(self) -> None:
+        self.backend.close()
+
+
+class _Prefetch:
+    """One in-flight gather-ahead read: the requested ids, the worker
+    future, and the ids of every write issued after this read was —
+    the rows ``take`` must repair."""
+
+    __slots__ = ("ids", "future", "written")
+
+    def __init__(self, ids: np.ndarray, future: Future):
+        self.ids = ids
+        self.future = future
+        self.written: List[np.ndarray] = []
+
+
+class TieredClientStore(ClientStateStore):
+    """``ClientStateStore`` + the gather-ahead / writeback tier.
+
+    All backend I/O funnels through one worker thread (optionally shared
+    across row families via ``executor`` so repairs order consistently),
+    giving two guarantees:
+
+      * a synchronous ``gather``/``scatter`` submitted after any write
+        observes it (FIFO worker — no torn rows), so the synchronous API
+        is bit-for-bit the base store's;
+      * an asynchronous ``prefetch`` issued *before* a write is repaired
+        at ``take`` time: ``scatter_async`` records its ids against
+        every in-flight prefetch, and ``take`` re-reads exactly the
+        intersecting rows (``refresh_rows``) — the pipelined
+        controller's stale-row invariant, at the storage layer.
+
+    The prefetch cache is bounded by ``prefetch_depth`` (the gather-ahead
+    double/quad-buffer); evicting an entry is safe because entries are
+    read-only copies — dirty rows live only in the write queue and the
+    backend, never in the cache.
+    """
+
+    def __init__(self, template, num_clients: int,
+                 backend: "str | StoreBackend" = "dense",
+                 prefetch_depth: int = 2,
+                 executor: Optional[ThreadPoolExecutor] = None):
+        super().__init__(template, num_clients, backend)
+        assert prefetch_depth >= 1, prefetch_depth
+        self.prefetch_depth = int(prefetch_depth)
+        self._own_exec = executor is None
+        self._exec = executor or ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="tiered-store")
+        self._lock = threading.Lock()
+        self._inflight: "OrderedDict[Any, _Prefetch]" = OrderedDict()
+        self._writes: "deque[Future]" = deque()
+
+    # -- synchronous API: ordered behind every pending write ------------
+
+    def gather(self, ids: np.ndarray):
+        ids = np.asarray(ids)
+        leaves = self._exec.submit(self._read, ids).result()
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def scatter(self, ids: np.ndarray, new) -> None:
+        self.scatter_async(ids, new).result()
+
+    # -- the async tier -------------------------------------------------
+
+    def scatter_async(self, ids: np.ndarray, new) -> Future:
+        """Queue a writeback of rows ``ids`` and return its future. The
+        store borrows ``new``'s leaves until the write lands — callers
+        hand over freshly materialised arrays and must not mutate them.
+        Marks every in-flight prefetch so ``take`` repairs overlaps."""
+        ids = np.asarray(ids)
+        leaves = [np.asarray(l) for l in jax.tree.leaves(new)]
+        with self._lock:
+            for pf in self._inflight.values():
+                pf.written.append(ids)
+            fut = self._exec.submit(self._write, ids, leaves)
+            self._writes.append(fut)
+            # reap completed writes so the queue stays bounded (surfaces
+            # worker exceptions early instead of only at flush)
+            while self._writes and self._writes[0].done():
+                self._writes.popleft().result()
+        return fut
+
+    def prefetch(self, token, ids: np.ndarray) -> None:
+        """Issue an async gather-ahead read of rows ``ids`` under
+        ``token`` (ignored if the token is already in flight). Beyond
+        ``prefetch_depth`` entries the oldest is evicted — safe, see the
+        class docstring."""
+        ids = np.asarray(ids).copy()
+        with self._lock:
+            if token in self._inflight:
+                return
+            while len(self._inflight) >= self.prefetch_depth:
+                self._inflight.popitem(last=False)
+            self._inflight[token] = _Prefetch(
+                ids, self._exec.submit(self._read, ids))
+
+    def take(self, token, ids: np.ndarray):
+        """Consume a prefetched gather: bit-for-bit what a synchronous
+        ``gather(ids)`` would return *now*. Rows written after the
+        prefetch was issued are re-read (the re-read serialises behind
+        the writes on the worker); a miss or id mismatch falls back to a
+        synchronous gather."""
+        ids = np.asarray(ids)
+        with self._lock:
+            pf = self._inflight.pop(token, None)
+        if pf is None or not np.array_equal(pf.ids, ids):
+            return self.gather(ids)
+        tree = jax.tree.unflatten(self._treedef, pf.future.result())
+        # after the pop above no scatter_async can append to pf.written
+        if pf.written:
+            stale = stale_mask(ids, np.concatenate(pf.written))
+            if stale.any():
+                refresh_rows(tree, self.gather(ids[stale]), stale)
+        return tree
+
+    def pending_prefetches(self) -> Tuple[Any, ...]:
+        with self._lock:
+            return tuple(self._inflight)
+
+    def drop_prefetches(self) -> None:
+        """Invalidate every in-flight prefetch (checkpoint restore —
+        the deterministic cohort stream restarts from the restored
+        round counter)."""
+        with self._lock:
+            self._inflight.clear()
+
+    def flush(self) -> None:
+        """Block until every queued writeback is durable in the backend
+        (checkpointing reads the population through here)."""
+        while True:
+            with self._lock:
+                if not self._writes:
+                    return
+                fut = self._writes.popleft()
+            fut.result()
+
+    def close(self) -> None:
+        self.flush()
+        self.drop_prefetches()
+        if self._own_exec:
+            self._exec.shutdown(wait=True)
+        super().close()

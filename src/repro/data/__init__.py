@@ -1,5 +1,6 @@
 from repro.data.emnist_like import EmnistLikeFederated  # noqa: F401
 from repro.data.quadratics import (  # noqa: F401
+    ProceduralQuadraticDataset,
     QuadraticDataset,
     make_paper_fig3,
     make_similarity_quadratics,

@@ -98,6 +98,106 @@ class QuadraticDataset:
         return self.f(np.asarray(params["x"])) - self.f_star
 
 
+class ProceduralQuadraticDataset:
+    """Population-scale quadratic clients with O(1) memory in N.
+
+    ``QuadraticDataset`` materialises (N, d, d) curvatures — device_data
+    alone is O(N·d²), which would defeat the tiered client store's whole
+    point at N = 10^6+ (benchmarks/bench_store.py, DESIGN.md §13). Here
+    every client's objective is *computed from its integer id*:
+
+        f_i(x) = 1/2 a_i ||x||² + b_i^T x,
+        a_i ∈ [curvature_lo, curvature_hi),  ||b_i|| <= G,
+
+    via integer hashing (Knuth multiplicative, 24-bit mantissa-exact
+    fractions — the same arithmetic in numpy and jnp, so host and device
+    batches agree bit-for-bit). Batch layout matches QuadraticDataset
+    (``quadratic_loss`` applies unchanged); σ=0 full-batch clients.
+    """
+
+    def __init__(self, num_clients: int, dim: int, *,
+                 curvature: Tuple[float, float] = (0.3, 1.3),
+                 G: float = 4.0, seed: int = 0):
+        self.num_clients = int(num_clients)
+        self.dim = int(dim)
+        self.curvature = (float(curvature[0]), float(curvature[1]))
+        self.G = float(G)
+        self.seed = int(seed)
+
+    # u(i, j): hash of (client id, coordinate) -> [0, 1), exact in fp32
+    # (24-bit steps); xp is np or jnp so both paths share the arithmetic
+    def _u(self, xp, ids, j):
+        salt = (j * 40503 + self.seed * 2246822519) % (1 << 32)
+        h = ids.astype(xp.uint32) * xp.uint32(2654435761) + xp.uint32(salt)
+        return ((h >> xp.uint32(8)).astype(xp.float32)
+                * xp.float32(1.0 / (1 << 24)))
+
+    def _coeffs(self, xp, ids):
+        """a: (S,) curvatures; b: (S, d) linear terms with ||b_i|| <= G."""
+        lo, hi = self.curvature
+        a = xp.float32(lo) + xp.float32(hi - lo) * self._u(xp, ids, 0)
+        cols = [self._u(xp, ids, j + 1) for j in range(self.dim)]
+        b = (xp.stack(cols, axis=-1) * xp.float32(2.0) - xp.float32(1.0))
+        b = b * xp.float32(self.G / np.sqrt(self.dim))
+        return a, b
+
+    def _batches(self, xp, ids, K: int, b: int):
+        s = ids.shape[0]
+        a, lin = self._coeffs(xp, ids)
+        eye = xp.eye(self.dim, dtype=xp.float32)
+        A = a[:, None, None, None, None] * eye
+        return {
+            "A": xp.broadcast_to(A, (s, K, b, self.dim, self.dim)),
+            "b": xp.broadcast_to(lin[:, None, None],
+                                 (s, K, b, self.dim)),
+        }
+
+    def round_batches(self, ids: np.ndarray, K: int, b: int, rng) -> Dict:
+        del rng  # σ=0 full-batch clients: no stochastic draw
+        return self._batches(np, np.asarray(ids), K, b)
+
+    def client_sizes(self, ids: np.ndarray) -> np.ndarray:
+        return np.ones(len(ids), np.int64)
+
+    # -- device-data protocol: data is *procedural*, so device_data is a
+    # placeholder dict and the batch fn hashes ids on device — O(1) HBM
+    def device_data(self) -> Dict:
+        return {"_": jnp.zeros((), jnp.float32)}
+
+    def device_batch_fn(self, K: int, b: int):
+        def batch_fn(data, ids, key):
+            del data, key
+            return self._batches(jnp, ids, K, b)
+
+        return batch_fn
+
+    def device_client_sizes(self):
+        return jnp.ones((self.num_clients,), jnp.float32)
+
+    def f(self, x) -> float:
+        """Population objective mean_i f_i(x), computed client-blockwise
+        (O(N) time, O(block) memory)."""
+        x = np.asarray(x, np.float32)
+        tot, n = 0.0, self.num_clients
+        for lo in range(0, n, 65536):
+            ids = np.arange(lo, min(lo + 65536, n))
+            a, b = self._coeffs(np, ids)
+            tot += float(np.sum(0.5 * a * (x @ x) + b @ x))
+        return tot / n
+
+    def suboptimality(self, params) -> float:
+        """f(x) − f(x*): the population optimum x* = −mean(b)/mean(a) is
+        closed-form for isotropic quadratics."""
+        tot_a, tot_b, n = 0.0, np.zeros(self.dim, np.float64), self.num_clients
+        for lo in range(0, n, 65536):
+            ids = np.arange(lo, min(lo + 65536, n))
+            a, b = self._coeffs(np, ids)
+            tot_a += float(a.sum())
+            tot_b += b.sum(axis=0)
+        x_star = -(tot_b / n) / (tot_a / n)
+        return self.f(np.asarray(params["x"])) - self.f(x_star)
+
+
 def make_paper_fig3(G: float = 10.0, mu: float = 0.5, dim: int = 20,
                     seed: int = 0) -> QuadraticDataset:
     """N=2 construction of Theorem VI: f1 = μ|x|² + G·u·x, f2 = −G·u·x,

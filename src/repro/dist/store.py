@@ -1,0 +1,68 @@
+"""Sharded population-store backend (DESIGN.md §13).
+
+``ShardedBackend`` block-partitions the `(N, ...)` population rows into
+``num_shards`` contiguous numpy blocks — the single-process model of a
+population store spread across parameter-server hosts (each shard is
+what one host would own; shard s holds rows [s*ceil(N/n), ...)). Row ids
+route to (shard, local offset) with pure integer arithmetic, so gathers
+and scatters decompose into per-shard slices exactly like cross-host
+RPCs would, and the property tests can exercise the routing logic
+against the dense reference.
+
+This lives in the dist layer next to ``partition_client_store`` (the
+*device*-side sharding of the scanned engine's store): that rule spreads
+the store across a mesh's "data" axis in HBM; this backend spreads it
+across logical hosts in host RAM. Registered as ``"sharded"``
+(``core/store.py`` imports this module lazily on first registry use).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.store import StoreBackend, register_store_backend
+
+
+class ShardedBackend(StoreBackend):
+    """Contiguous row blocks across ``num_shards`` host arrays."""
+
+    name = "sharded"
+
+    def __init__(self, num_shards: int = 4):
+        assert num_shards >= 1, num_shards
+        self.num_shards = int(num_shards)
+
+    def allocate(self, num_rows, shape, dtype):
+        block = -(-num_rows // self.num_shards)  # ceil — last shard ragged
+        shards: List[np.ndarray] = []
+        for s in range(self.num_shards):
+            n = max(0, min(block, num_rows - s * block))
+            shards.append(np.zeros((n,) + tuple(shape), dtype))
+        return {"shards": shards, "block": block, "num_rows": num_rows}
+
+    def read_rows(self, handle, ids):
+        ids = np.asarray(ids)
+        block = handle["block"]
+        shard_of, local = ids // block, ids % block
+        first = handle["shards"][0]
+        out = np.empty(ids.shape + first.shape[1:], first.dtype)
+        for s in np.unique(shard_of):
+            here = shard_of == s
+            out[here] = handle["shards"][s][local[here]]
+        return out
+
+    def write_rows(self, handle, ids, rows):
+        ids = np.asarray(ids)
+        rows = np.asarray(rows)
+        block = handle["block"]
+        shard_of, local = ids // block, ids % block
+        for s in np.unique(shard_of):
+            here = shard_of == s
+            handle["shards"][s][local[here]] = rows[here]
+
+    def nbytes(self, handle) -> int:
+        return sum(int(a.nbytes) for a in handle["shards"])
+
+
+register_store_backend("sharded", ShardedBackend)

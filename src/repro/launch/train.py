@@ -24,6 +24,7 @@ from repro.core import (
     compressor_names,
     local_solver_names,
     server_optimizer_names,
+    store_backend_names,
 )
 from repro.optim.schedules import schedule_names
 from repro.data import SyntheticLMFederated
@@ -79,9 +80,9 @@ def main(argv=None):
                     help="per-local-step eta_l schedule (sgd_sched solver "
                          "only)")
     ap.add_argument("--list-registries", action="store_true",
-                    help="print the four strategy registries (algorithms, "
-                         "server optimizers, compressors, local solvers) "
-                         "and exit")
+                    help="print the five strategy registries (algorithms, "
+                         "server optimizers, compressors, local solvers, "
+                         "store backends) and exit")
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
     ap.add_argument("--compress", default="none",
@@ -98,6 +99,18 @@ def main(argv=None):
                     help="scanned-engine chunk size: run rounds on device "
                          "in lax.scan chunks of up to this many (0 = host "
                          "loop; DESIGN.md §10)")
+    ap.add_argument("--store", default="dense",
+                    choices=["dense", "tiered"],
+                    help="client-store tier: 'tiered' keeps the (N, ...) "
+                         "population host-side and gathers only cohort "
+                         "rows to the device (DESIGN.md §13)")
+    ap.add_argument("--store-backend", default="",
+                    help="population-store backend ('' = dense RAM; also: "
+                         "memmap, sharded — see --list-registries)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="tiered-store gather-ahead depth: chunks of "
+                         "population rows prefetched while the device "
+                         "computes")
     ap.add_argument("--resume", default="",
                     help="checkpoint to restore before training")
     ap.add_argument("--rounds", type=int, default=50)
@@ -120,6 +133,7 @@ def main(argv=None):
             ("server_optimizers", server_optimizer_names()),
             ("compressors", compressor_names()),
             ("local_solvers", local_solver_names()),
+            ("store_backends", store_backend_names()),
         ):
             print(f"{title}: {' '.join(names)}")
         return None
@@ -155,11 +169,18 @@ def main(argv=None):
     trainer = FederatedTrainer(
         partial(M.loss_fn, cfg), partial(M.init_params, cfg), spec, data,
         seed=args.seed, pipeline_depth=args.pipeline_depth,
-        scan_rounds=args.scan_rounds,
+        scan_rounds=args.scan_rounds, store=args.store,
+        store_backend=args.store_backend,
+        prefetch_depth=args.prefetch_depth,
     )
     if trainer.scan_active:
         print(f"scanned engine: on-device chunks of <= {args.scan_rounds} "
               f"rounds")
+    if args.store == "tiered":
+        print(f"tiered store: population host-side "
+              f"({args.store_backend or 'dense'} backend), device peak "
+              f"{trainer.client_store_device_bytes()/1e6:.2f}MB of client "
+              f"state (gather-ahead depth {args.prefetch_depth})")
     if args.resume:
         load_trainer(args.resume, trainer)
         print(f"resumed from {args.resume} at round {trainer.round_idx}")

@@ -4,3 +4,12 @@ import sys
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; only launch/dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # tier-1 but memory-heavier than the rest: the N=1e5 tiered-store
+    # smoke (tests/test_store.py) runs in the CI shard matrix by default;
+    # deselect locally with -m "not scale" when RAM is tight
+    config.addinivalue_line(
+        "markers",
+        "scale: population-scale smoke tests (N >= 1e5, still CI-fast)")

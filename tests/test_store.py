@@ -1,0 +1,228 @@
+"""Store-equivalence test layer (DESIGN.md §13).
+
+The tiered population store must be *invisible* to training: every
+configuration that runs with the dense store must produce bit-for-bit
+the same trajectory with ``store="tiered"`` — across algorithms, local
+solvers, codecs, all three execution engines, checkpoint-resume, every
+StoreBackend, and every gather-ahead depth. These tests pin that
+equivalence; the async machinery itself is property-tested in
+tests/test_store_properties.py.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_trainer, save_trainer
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import (
+    ProceduralQuadraticDataset,
+    make_similarity_quadratics,
+    quadratic_loss,
+)
+
+N, S, DIM, K = 12, 4, 5, 2
+ROUNDS = 6  # scan_rounds=2 => 3 chunks: crosses chunk boundaries
+
+
+def _dataset():
+    return make_similarity_quadratics(N, DIM, delta=0.3, G=8.0, mu=0.3,
+                                      seed=0)
+
+
+def _spec(algo="scaffold", solver="sgd", codec="none"):
+    return FedRoundSpec(algorithm=algo, num_clients=N, num_sampled=S,
+                        local_steps=K, local_batch=1, eta_l=0.1,
+                        local_solver=solver, compress=codec)
+
+
+def _init_params(key):
+    return {"x": jnp.ones((DIM,), jnp.float32)}
+
+
+ENGINES = {
+    "host": dict(),
+    "pipelined": dict(pipeline_depth=2),
+    "scanned": dict(scan_rounds=2),
+}
+
+
+def _trainer(spec, ds, **kw):
+    return FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                            **kw)
+
+
+def _state(tr):
+    """The trainer's full array state: server + every population row
+    family (read through the host stores, which sync_host_store makes
+    authoritative in every mode)."""
+    tr.sync_host_store()
+    all_ids = np.arange(tr.spec.num_clients)
+    state = {"x": tr.x, "c": tr.c, "opt": tr.server.opt_state,
+             "store": tr.store.gather(all_ids)}
+    if tr.residual_store is not None:
+        state["residual"] = tr.residual_store.gather(all_ids)
+    if tr.solver_store is not None:
+        state["solver"] = tr.solver_store.gather(all_ids)
+    return state
+
+
+def _assert_state_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        la, lb = jax.tree.leaves(a[k]), jax.tree.leaves(b[k])
+        assert len(la) == len(lb), k
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=k)
+
+
+def _history(tr):
+    return [{k: v for k, v in m.items() if k != "round"}
+            for m in tr.history]
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+@pytest.mark.parametrize("codec", ["none", "int8_ef"])
+@pytest.mark.parametrize("solver", ["sgd", "adam"])
+@pytest.mark.parametrize("algo", ["scaffold", "scaffold_m"])
+def test_tiered_matches_dense(algo, solver, codec, engine):
+    """tiered == dense bit-for-bit: server state, every population row
+    family (c_i / residuals / solver slots), and the metric history."""
+    ds = _dataset()
+    dense = _trainer(_spec(algo, solver, codec), ds, **ENGINES[engine])
+    tiered = _trainer(_spec(algo, solver, codec), ds, store="tiered",
+                      **ENGINES[engine])
+    if engine == "scanned":
+        assert dense.scan_active and tiered.scan_active
+    dense.run(ROUNDS)
+    tiered.run(ROUNDS)
+    assert _history(dense) == _history(tiered)
+    _assert_state_equal(_state(dense), _state(tiered))
+    tiered.close()
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_checkpoint_resume_tiered(engine, tmp_path):
+    """Mid-run save/restore of a tiered trainer (population on host,
+    memmap backend) resumes bit-for-bit the unbroken dense run."""
+    ds = _dataset()
+    spec = _spec("scaffold_m", "adam", "int8_ef")
+    ref = _trainer(spec, ds, **ENGINES[engine])
+    ref.run(ROUNDS)
+
+    path = os.path.join(str(tmp_path), "ck.npz")
+    a = _trainer(spec, ds, store="tiered", store_backend="memmap",
+                 **ENGINES[engine])
+    a.run(ROUNDS // 2)
+    save_trainer(path, a)
+    a.close()
+    b = _trainer(spec, ds, store="tiered", store_backend="memmap",
+                 **ENGINES[engine])
+    load_trainer(path, b)
+    b.run(ROUNDS - ROUNDS // 2)
+    assert _history(b) == _history(ref)[ROUNDS // 2:]
+    _assert_state_equal(_state(ref), _state(b))
+    b.close()
+
+
+def test_prefetch_depth_invariance():
+    """Gather-ahead depth is a pure performance knob: depth 1 == 2 == 4
+    trajectories on the scanned engine (and a depth deeper than the run
+    is harmless)."""
+    ds = _dataset()
+    states, hists = [], []
+    for depth in (1, 2, 4):
+        tr = _trainer(_spec("scaffold", "adam", "int8_ef"), ds,
+                      scan_rounds=2, store="tiered", prefetch_depth=depth)
+        tr.run(ROUNDS)
+        states.append(_state(tr))
+        hists.append(_history(tr))
+        tr.close()
+    for s, h in zip(states[1:], hists[1:]):
+        assert h == hists[0]
+        _assert_state_equal(states[0], s)
+
+
+@pytest.mark.parametrize("backend", ["memmap", "sharded"])
+def test_backend_equivalence(backend):
+    """Every registered StoreBackend is storage-transparent: the tiered
+    run matches dense regardless of where the population rows live."""
+    ds = _dataset()
+    dense = _trainer(_spec("scaffold"), ds, scan_rounds=2)
+    tiered = _trainer(_spec("scaffold"), ds, scan_rounds=2, store="tiered",
+                      store_backend=backend)
+    dense.run(ROUNDS)
+    tiered.run(ROUNDS)
+    assert _history(dense) == _history(tiered)
+    _assert_state_equal(_state(dense), _state(tiered))
+    tiered.close()
+
+
+def test_run_round_and_eval_chunking_tiered():
+    """Per-round driving (run_round) and eval-aligned partial chunks hit
+    the prefetch-mismatch fallback path and still match dense."""
+    ds = _dataset()
+    dense = _trainer(_spec("scaffold"), ds, scan_rounds=4)
+    tiered = _trainer(_spec("scaffold"), ds, scan_rounds=4, store="tiered")
+    eval_fn = lambda p: {"metric": 0.0}  # noqa: E731
+    dense.run(3, eval_fn=eval_fn, eval_every=2)
+    tiered.run(3, eval_fn=eval_fn, eval_every=2)
+    dense.run_round()
+    tiered.run_round()
+    assert _history(dense) == _history(tiered)
+    _assert_state_equal(_state(dense), _state(tiered))
+    tiered.close()
+
+
+def test_device_bytes_bounded_by_cohort():
+    """The tiered scanned engine's peak device client-store bytes scale
+    with min(N, R*S), never with N."""
+    ds = _dataset()
+    dense = _trainer(_spec("scaffold"), ds, scan_rounds=2)
+    tiered = _trainer(_spec("scaffold"), ds, scan_rounds=2, store="tiered")
+    row = tiered.store.row_nbytes
+    assert dense.client_store_device_bytes() == N * row
+    assert tiered.client_store_device_bytes() == min(N, 2 * S) * row
+    assert tiered.client_store_device_bytes() < dense.client_store_device_bytes()
+    tiered.close()
+
+
+@pytest.mark.scale
+def test_population_scale_smoke():
+    """N=10^5 tiered run (procedural data, O(1) device memory): trains,
+    improves, and the device never holds more than the cohort buffer."""
+    n, s, chunk = 100_000, 32, 4
+    ds = ProceduralQuadraticDataset(n, 4, seed=3)
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=n, num_sampled=s,
+                        local_steps=2, local_batch=1, eta_l=0.3)
+    init = lambda key: {"x": jnp.ones((4,), jnp.float32)}  # noqa: E731
+    tr = FederatedTrainer(quadratic_loss, init, spec, ds, seed=0,
+                          scan_rounds=chunk, store="tiered")
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(8)
+    row = tr.store.row_nbytes
+    assert tr.client_store_device_bytes() == chunk * s * row  # not n * row
+    assert tr.client_store_device_bytes() < n * row // 100
+    assert tr.store.population_nbytes == n * row
+    losses = [m["loss"] for m in tr.history]
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+    tr.close()
+
+
+def test_tiered_host_loop_uses_store_backend():
+    """store='tiered' composes with the host loop too: the population
+    lives in the backend (here: memmap files on disk) and the loop reads
+    and writes rows through the async tier."""
+    ds = _dataset()
+    tr = _trainer(_spec("scaffold"), ds, store="tiered",
+                  store_backend="memmap", pipeline_depth=1)
+    tr.run(4)
+    ref = _trainer(_spec("scaffold"), ds)
+    ref.run(4)
+    _assert_state_equal(_state(ref), _state(tr))
+    tr.close()

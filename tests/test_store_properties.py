@@ -1,0 +1,273 @@
+"""StoreBackend / tiered-store property tests (DESIGN.md §13).
+
+Every registered ``StoreBackend`` must be storage-transparent, and the
+tiered store's async gather-ahead must be *semantically invisible* —
+under hypothesis-driven op sequences:
+
+  * gather/scatter round-trip identity — any interleaving of scatters
+    and gathers matches a plain numpy ``(N, ...)`` reference model,
+  * copy-on-gather ownership — mutating a gathered row never writes
+    through to the population, and a later scatter never mutates a
+    previously gathered result (the ISSUE-6 aliasing fix, asserted),
+  * dirty-row writeback ordering under interleaved prefetch — a
+    ``take`` after any mix of ``prefetch``/``scatter_async`` returns
+    exactly what a synchronous gather would (the stale-row race the
+    pipelined path repairs, now at the storage layer),
+  * eviction never drops an unwritten row — overflowing the bounded
+    prefetch cache while writebacks are in flight loses no data,
+
+plus direct unit tests for the extracted repair primitives
+(``stale_mask`` / ``refresh_rows`` — previously only exercised
+indirectly through full pipelined runs) and the registry error paths.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # Degrade per-test instead of importorskip'ing the module: the unit /
+    # registry tests below need no hypothesis and must run everywhere.
+    # The skip reason matches check_skips.py's missing-optional-dependency
+    # pattern so CI still proves the property tests execute there.
+    def given(**kw):
+        return lambda fn: pytest.mark.skip(
+            reason="could not import 'hypothesis'")(fn)
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 — stands in for hypothesis.strategies
+        integers = staticmethod(lambda a, b: None)
+
+from repro.core import (
+    ClientStateStore,
+    TieredClientStore,
+    make_store_backend,
+    refresh_rows,
+    register_store_backend,
+    stale_mask,
+    store_backend_names,
+)
+from repro.dist.store import ShardedBackend
+
+BACKENDS = ("dense", "memmap", "sharded")
+TEMPLATE = {"w": np.zeros((3,), np.float32), "m": np.zeros((2,), np.float32)}
+N = 17
+
+
+def _make(backend, tiered=False, **kw):
+    cls = TieredClientStore if tiered else ClientStateStore
+    return cls(TEMPLATE, N, backend=make_store_backend(backend), **kw)
+
+
+def _rows(rng, ids):
+    return {"w": rng.normal(size=(len(ids), 3)).astype(np.float32),
+            "m": rng.normal(size=(len(ids), 2)).astype(np.float32)}
+
+
+class _RefModel:
+    """Plain numpy (N, ...) mirror — the semantics every backend and the
+    tiered store must match at all times."""
+
+    def __init__(self):
+        self.leaves = {k: np.zeros((N,) + v.shape, v.dtype)
+                       for k, v in TEMPLATE.items()}
+
+    def scatter(self, ids, rows):
+        for k in self.leaves:
+            self.leaves[k][ids] = rows[k]
+
+    def gather(self, ids):
+        return {k: v[ids] for k, v in self.leaves.items()}
+
+
+def _assert_rows_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# backend round-trip identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_backend_roundtrip_identity(backend, seed):
+    rng = np.random.default_rng(seed)
+    store, ref = _make(backend), _RefModel()
+    try:
+        for _ in range(8):
+            ids = rng.choice(N, size=rng.integers(1, N + 1), replace=False)
+            if rng.random() < 0.7:
+                rows = _rows(rng, ids)
+                store.scatter(ids, rows)
+                ref.scatter(ids, rows)
+            _assert_rows_equal(ref.gather(ids), store.gather(ids))
+        all_ids = np.arange(N)
+        _assert_rows_equal(ref.gather(all_ids), store.gather(all_ids))
+    finally:
+        store.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_copy_on_gather_ownership(backend):
+    """gather returns owned rows; scatter copies values in (ISSUE 6)."""
+    rng = np.random.default_rng(0)
+    store = _make(backend)
+    try:
+        ids = np.array([1, 5, 9])
+        rows = _rows(rng, ids)
+        store.scatter(ids, rows)
+        # mutating the scattered-in arrays must not reach the store
+        rows["w"][:] = -1.0
+        got = store.gather(ids)
+        assert not np.any(got["w"] == -1.0)
+        # mutating a gathered result must not write through
+        got["w"][:] = -2.0
+        again = store.gather(ids)
+        assert not np.any(again["w"] == -2.0)
+        # and a later scatter must not mutate a previous gather
+        held = store.gather(ids)
+        before = {k: v.copy() for k, v in held.items()}
+        store.scatter(ids, _rows(rng, ids))
+        _assert_rows_equal(before, held)
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# tiered store: interleaved prefetch / writeback
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_tiered_interleaved_writeback_ordering(backend, seed):
+    """A take() after any interleaving of prefetches and async writebacks
+    equals a synchronous gather at take time — writes issued after the
+    prefetch are repaired, never lost, never torn."""
+    rng = np.random.default_rng(seed)
+    store, ref = _make(backend, tiered=True, prefetch_depth=3), _RefModel()
+    try:
+        inflight = {}
+        for step in range(24):
+            op = rng.random()
+            if op < 0.4:  # async writeback
+                ids = rng.choice(N, size=rng.integers(1, 7), replace=False)
+                rows = _rows(rng, ids)
+                store.scatter_async(ids, rows)
+                ref.scatter(ids, rows)
+            elif op < 0.7:  # gather-ahead
+                ids = rng.choice(N, size=rng.integers(1, 7), replace=False)
+                store.prefetch(step, ids)
+                inflight[step] = ids
+            elif inflight:  # consume a prefetch (possibly evicted: both
+                token = list(inflight)[0]  # hit and miss paths must agree)
+                ids = inflight.pop(token)
+                _assert_rows_equal(ref.gather(ids), store.take(token, ids))
+        store.flush()
+        all_ids = np.arange(N)
+        _assert_rows_equal(ref.gather(all_ids), store.gather(all_ids))
+    finally:
+        store.close()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_eviction_never_drops_unwritten_row(seed):
+    """Overflowing the depth-1 prefetch cache while writebacks are queued
+    loses nothing: dirty rows live in the write queue and the backend,
+    never (only) in the evictable cache."""
+    rng = np.random.default_rng(seed)
+    store, ref = _make("dense", tiered=True, prefetch_depth=1), _RefModel()
+    try:
+        for t in range(20):
+            ids = rng.choice(N, size=4, replace=False)
+            rows = _rows(rng, ids)
+            store.scatter_async(ids, rows)
+            ref.scatter(ids, rows)
+            store.prefetch(("evict-me", t), rng.choice(N, size=4,
+                                                       replace=False))
+        store.flush()
+        _assert_rows_equal(ref.gather(np.arange(N)),
+                           store.gather(np.arange(N)))
+    finally:
+        store.close()
+
+
+def test_take_miss_and_mismatch_fall_back():
+    store = _make("dense", tiered=True)
+    try:
+        rng = np.random.default_rng(1)
+        ids = np.array([2, 4, 6])
+        rows = _rows(rng, ids)
+        store.scatter(ids, rows)
+        # miss: token never prefetched
+        _assert_rows_equal(rows, store.take("never-issued", ids))
+        # mismatch: prefetched ids differ from requested ids
+        store.prefetch("tok", np.array([0, 1]))
+        _assert_rows_equal(rows, store.take("tok", ids))
+        assert store.pending_prefetches() == ()
+    finally:
+        store.close()
+
+
+# ---------------------------------------------------------------------------
+# repair primitives (extracted from the pipelined controller)
+# ---------------------------------------------------------------------------
+
+
+def test_stale_mask_marks_overwritten_rows():
+    ids = np.array([3, 7, 1, 9])
+    np.testing.assert_array_equal(
+        stale_mask(ids, np.array([7, 9, 50])),
+        np.array([False, True, False, True]))
+    assert not stale_mask(ids, np.array([], np.int64)).any()
+
+
+def test_refresh_rows_restores_gather_semantics():
+    prefetched = {"w": np.zeros((4, 3), np.float32)}
+    fresh = {"w": np.full((2, 3), 5.0, np.float32)}
+    stale = np.array([False, True, False, True])
+    refresh_rows(prefetched, fresh, stale)
+    np.testing.assert_array_equal(prefetched["w"][[1, 3]], fresh["w"])
+    assert not prefetched["w"][[0, 2]].any()
+
+
+# ---------------------------------------------------------------------------
+# registry + sharded routing edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_builtins_and_rejects_unknown():
+    names = store_backend_names()
+    assert {"dense", "memmap", "sharded"} <= set(names)
+    with pytest.raises(KeyError, match="unknown store backend"):
+        make_store_backend("hbm3")
+    with pytest.raises(AssertionError):
+        register_store_backend("", ShardedBackend)
+
+
+def test_sharded_ragged_last_shard():
+    """N not divisible by num_shards: the last shard is ragged and ids
+    still route correctly through the block arithmetic."""
+    store = ClientStateStore(TEMPLATE, N, backend=ShardedBackend(5))
+    rng = np.random.default_rng(2)
+    ids = np.array([0, 3, 4, 15, 16])  # spans first/last (ragged) shards
+    rows = _rows(rng, ids)
+    store.scatter(ids, rows)
+    _assert_rows_equal(rows, store.gather(ids))
+    # untouched rows stay zero
+    rest = np.setdiff1d(np.arange(N), ids)
+    assert not store.gather(rest)["w"].any()
+
+
+def test_population_and_row_nbytes():
+    store = _make("dense")
+    assert store.row_nbytes == (3 + 2) * 4
+    assert store.population_nbytes == N * store.row_nbytes
+    store.close()
