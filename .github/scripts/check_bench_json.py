@@ -51,6 +51,25 @@ def check(path: str) -> None:
             else:
                 assert record["device_store_bytes"] == (
                     record["n_clients"] * record["row_bytes"]), record
+    if payload["bench"] == "async":
+        modes = {record["mode"] for record in records}
+        # acceptance: the sync-baseline rows ride in the same artifact
+        assert "sync" in modes, modes
+        async_records = [r for r in records if r["mode"] == "async"]
+        sigmas = sorted({r["latency_sigma"] for r in async_records})
+        # acceptance: >= 3 straggler-severity points in the sweep
+        assert len(sigmas) >= 3, sigmas
+        for record in records:
+            assert record["mode"] in {"sync", "async"}, record
+            assert record["rounds_per_s"] > 0, record
+            assert record["sim_rounds_per_s"] > 0, record
+        for record in async_records:
+            hist = record["staleness_hist"]
+            assert isinstance(hist, list) and sum(hist) > 0, record
+            assert record["dropped_total"] >= 0, record
+            assert record["buffer_size"] <= record["max_inflight"], record
+            # the engine's whole point: beats the sync cohort wait
+            assert record["speedup_vs_sync"] > 0, record
     if payload["bench"] == "compression":
         codecs = {record["codec"] for record in records}
         assert "none" in codecs, codecs  # the uncompressed baseline row

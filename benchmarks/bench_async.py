@@ -1,0 +1,166 @@
+"""Straggler-severity sweep: async buffered aggregation vs the sync
+cohort round (DESIGN.md §14).
+
+Under a lognormal per-dispatch latency model (log-space ``sigma`` is the
+straggler-tail knob) with optional client dropout, a synchronous round
+waits for the cohort's slowest client while the async engine aggregates
+the first ``M`` of ``K`` in flight. Both engines run the same quadratic
+population; per configuration we report
+
+  sim_rounds_per_s     aggregations per unit *simulated* time — the
+                       straggler-resilience axis (the sync baseline's
+                       virtual round time is its cohort max latency),
+  speedup_vs_sync      sim-time throughput over the sync baseline at the
+                       same severity,
+  final_loss           convergence sanity under staleness + dropout,
+  staleness_hist / dropped_total   the §14 observability counters.
+
+Emits one ``scaffold-bench/v1`` record per (sigma, dropout) plus the
+required sync-baseline rows — ``python -m benchmarks.bench_async``
+writes ``BENCH_async.json`` (validated by
+.github/scripts/check_bench_json.py; ``--smoke`` is the CI-speed
+preset).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_argparser, bench_cli
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer, make_availability
+from repro.data import make_similarity_quadratics, quadratic_loss
+
+N, S, K_STEPS, DIM = 64, 8, 4, 16
+
+
+def _make_trainer(seed=0, **kw):
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=N, num_sampled=S,
+                        local_steps=K_STEPS, local_batch=4, eta_l=0.05)
+    data = make_similarity_quadratics(N, DIM, delta=0.5, G=1.0, seed=seed)
+    init = lambda key: {"x": jnp.zeros((DIM,), jnp.float32)}
+    return FederatedTrainer(quadratic_loss, init, spec, data, seed=seed,
+                            **kw)
+
+
+def _sync_virtual_time(sigma: float, rounds: int, seed: int) -> float:
+    """The sync baseline's simulated duration: each round waits for the
+    cohort's slowest client under the *same* latency model the async
+    sweep uses (dropout excluded — sync re-waits, it cannot drop)."""
+    model = make_availability("lognormal", seed=seed, sigma=sigma)
+    total, k = 0.0, {}
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        cohort = rng.choice(N, size=S, replace=False)
+        total += max(model.fate(int(c), k.setdefault(int(c), 0))[0]
+                     for c in cohort)
+        for c in cohort:
+            k[int(c)] += 1
+    return total
+
+
+def bench_sync(rounds: int, *, sigma: float, seed: int = 0):
+    tr = _make_trainer(seed=seed)
+    tr.run(2)  # compile outside timing
+    t0 = time.perf_counter()
+    tr.run(rounds)
+    wall = time.perf_counter() - t0
+    sim_time = _sync_virtual_time(sigma, rounds, seed)
+    return {
+        "bench": "async",
+        "mode": "sync",
+        "latency_sigma": sigma,
+        "dropout": 0.0,
+        "rounds": rounds,
+        "rounds_per_s": rounds / max(wall, 1e-9),
+        "sim_time": sim_time,
+        "sim_rounds_per_s": rounds / max(sim_time, 1e-9),
+        "final_loss": tr.history[-1]["loss"],
+    }
+
+
+def bench_async(rounds: int, *, sigma: float, dropout: float,
+                buffer_size: int, max_inflight: int,
+                staleness_weighting: str = "polynomial", seed: int = 0):
+    tr = _make_trainer(
+        seed=seed, async_buffer=buffer_size, max_inflight=max_inflight,
+        availability="lognormal",
+        availability_kwargs=dict(seed=seed, sigma=sigma, dropout=dropout),
+        staleness_weighting=staleness_weighting,
+        staleness_kwargs=dict(alpha=0.5))
+    tr.run(2)  # compile outside timing
+    t0 = time.perf_counter()
+    tr.run(rounds)
+    wall = time.perf_counter() - t0
+    hist = tr.history[-rounds:]
+    sim_time = hist[-1]["sim_time"] - tr.history[-rounds - 1]["sim_time"]
+    max_tau = max(len(h["staleness_hist"]) for h in hist)
+    stale_hist = [0] * max_tau
+    for h in hist:
+        for tau, count in enumerate(h["staleness_hist"]):
+            stale_hist[tau] += count
+    return {
+        "bench": "async",
+        "mode": "async",
+        "availability": "lognormal",
+        "latency_sigma": sigma,
+        "dropout": dropout,
+        "buffer_size": buffer_size,
+        "max_inflight": max_inflight,
+        "staleness_weighting": staleness_weighting,
+        "rounds": rounds,
+        "rounds_per_s": rounds / max(wall, 1e-9),
+        "sim_time": sim_time,
+        "sim_rounds_per_s": rounds / max(sim_time, 1e-9),
+        "staleness_hist": stale_hist,
+        "staleness_mean": (sum(t * c for t, c in enumerate(stale_hist))
+                           / max(sum(stale_hist), 1)),
+        "dropped_total": tr.async_engine.dropped_total,
+        "final_loss": hist[-1]["loss"],
+    }
+
+
+def run(*, sigmas, dropouts, rounds: int, buffer_size: int,
+        max_inflight: int, seed: int = 0):
+    rows = []
+    for sigma in sigmas:
+        base = bench_sync(rounds, sigma=sigma, seed=seed)
+        rows.append(base)
+        print(f"sync      sigma={sigma:3.1f}          : "
+              f"{base['sim_rounds_per_s']:7.3f} sim rounds/s "
+              f"(loss {base['final_loss']:.4f})")
+        for dropout in dropouts:
+            r = bench_async(rounds, sigma=sigma, dropout=dropout,
+                            buffer_size=buffer_size,
+                            max_inflight=max_inflight, seed=seed)
+            r["speedup_vs_sync"] = (r["sim_rounds_per_s"]
+                                    / base["sim_rounds_per_s"])
+            rows.append(r)
+            print(f"async M={buffer_size} K={max_inflight} sigma={sigma:3.1f} "
+                  f"drop={dropout:4.2f}: {r['sim_rounds_per_s']:7.3f} "
+                  f"sim rounds/s ({r['speedup_vs_sync']:5.2f}x sync, "
+                  f"{r['dropped_total']} dropped, "
+                  f"loss {r['final_loss']:.4f})")
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, rounds: int = 60):
+    del fast  # scale rides on --smoke/--rounds (no --full, like bench_round)
+    if smoke:
+        # CI-speed preset: the >=3-point severity sweep + sync baselines
+        return run(sigmas=(0.5, 1.0, 2.0), dropouts=(0.1,),
+                   rounds=min(rounds, 20), buffer_size=4, max_inflight=2 * S,
+                   seed=0)
+    return run(sigmas=(0.5, 1.0, 1.5, 2.0), dropouts=(0.0, 0.1, 0.3),
+               rounds=rounds, buffer_size=4, max_inflight=2 * S, seed=0)
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed preset (3 severities, 20 rounds)")
+    ap.add_argument("--rounds", type=int, default=60,
+                    help="timed aggregations per configuration")
+    bench_cli("async", main, parser=ap, forward=("smoke", "rounds"))

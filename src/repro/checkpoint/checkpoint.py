@@ -38,12 +38,19 @@ def save_checkpoint(path: str, tree, extra: Dict[str, Any] | None = None):
     np.savez(path, __meta__=json.dumps(meta), **flat)
 
 
-def load_checkpoint(path: str, template) -> Tuple[Any, Dict[str, Any]]:
-    """Restore into the structure of ``template``."""
+def _read_checkpoint(path: str) -> Tuple[Dict[str, np.ndarray],
+                                         Dict[str, Any]]:
+    """The archive's raw flat arrays + extra metadata (no template yet —
+    callers whose template depends on the metadata, like the async
+    engine's variable-length pending state, read this first)."""
     with np.load(path if path.endswith(".npz") else path + ".npz",
                  allow_pickle=False) as data:
         meta = json.loads(str(data["__meta__"]))
         flat = {k: data[k] for k in meta["keys"]}
+    return flat, meta["extra"]
+
+
+def _unflatten_into(flat: Dict[str, np.ndarray], template):
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path_elems, leaf in paths:
@@ -53,7 +60,13 @@ def load_checkpoint(path: str, template) -> Tuple[Any, Dict[str, Any]]:
         arr = flat[key]
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         leaves.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, leaves), meta["extra"]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(path: str, template) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``template``."""
+    flat, extra = _read_checkpoint(path)
+    return _unflatten_into(flat, template), extra
 
 
 def _trainer_tree(trainer) -> Dict[str, Any]:
@@ -78,12 +91,21 @@ def _trainer_tree(trainer) -> Dict[str, Any]:
 
 def save_trainer(path: str, trainer):
     """Checkpoint a FederatedTrainer: ServerState, all N client states
-    (+ residuals when compressing), round counter, and host RNG states."""
+    (+ residuals when compressing), round counter, and host RNG states.
+    An async-mode trainer (DESIGN.md §14) additionally records every
+    pending (in-flight or buffered) update — stacked payload rows under
+    the ``async`` tree key, dispatch/event records in the metadata — so
+    resume is deterministic without recomputing them."""
     extra = {
         "round": trainer.round_idx,
         "host_rng": trainer.host_rng_state(),
     }
-    save_checkpoint(path, _trainer_tree(trainer), extra=extra)
+    tree = _trainer_tree(trainer)
+    engine = getattr(trainer, "async_engine", None)
+    if engine is not None:
+        tree["async"] = engine.checkpoint_tree()
+        extra["async"] = engine.checkpoint_meta()
+    save_checkpoint(path, tree, extra=extra)
 
 
 def load_trainer(path: str, trainer):
@@ -91,7 +113,17 @@ def load_trainer(path: str, trainer):
     trainer (same spec/model/dataset). Clears any prefetched rounds."""
     import dataclasses
 
-    tree, extra = load_checkpoint(path, _trainer_tree(trainer))
+    flat, extra = _read_checkpoint(path)
+    template = _trainer_tree(trainer)
+    engine = getattr(trainer, "async_engine", None)
+    if engine is not None:
+        assert "async" in extra, (
+            "checkpoint has no async-engine state: it was saved by a "
+            "synchronous trainer; restore into a matching configuration")
+        # the pending-payload template is (P, ...)-shaped with P from the
+        # checkpoint itself, not from the (freshly constructed) trainer
+        template["async"] = engine.pending_template(extra["async"])
+    tree = _unflatten_into(flat, template)
     all_ids = np.arange(trainer.store.num_clients)
     trainer.server = dataclasses.replace(
         trainer.server,
@@ -108,4 +140,6 @@ def load_trainer(path: str, trainer):
     trainer.round_idx = int(extra.get("round", 0))
     if "host_rng" in extra:
         trainer.set_host_rng_state(extra["host_rng"])
+    if engine is not None:
+        engine.restore(tree["async"], extra["async"])
     return trainer

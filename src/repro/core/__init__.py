@@ -12,12 +12,13 @@ Entry points:
   federated_round  — back-compat tuple shim over run_round (Algorithm 1/2)
   client_update    — one client's K corrected local steps
   FederatedTrainer — host controller (sampling + stateful-client stores;
-                     sync / pipelined / scanned execution modes)
+                     sync / pipelined / scanned / async execution modes)
 
-Extensibility (DESIGN.md §9/§11/§12/§13) — five registries, each listable
-(``algorithm_names`` / ``server_optimizer_names`` / ``compressor_names``
-/ ``local_solver_names`` / ``store_backend_names``;
-``launch/train.py --list-registries`` prints all five):
+Extensibility (DESIGN.md §9/§11/§12/§13/§14) — seven registries, each
+listable (``algorithm_names`` / ``server_optimizer_names`` /
+``compressor_names`` / ``local_solver_names`` / ``store_backend_names``
+/ ``availability_names`` / ``staleness_weighting_names``;
+``launch/train.py --list-registries`` prints all seven):
   Algorithm / register_algorithm            — per-round algorithm strategy
   ServerOptimizer / register_server_optimizer — server step on the
                                               aggregated delta
@@ -35,6 +36,13 @@ Extensibility (DESIGN.md §9/§11/§12/§13) — five registries, each listable
                                               hosts; the tiered store
                                               gathers cohort rows through
                                               it — DESIGN.md §13)
+  AvailabilityModel / register_availability — trace-driven client
+                                              latency/dropout simulation
+                                              for the async engine
+                                              (DESIGN.md §14)
+  StalenessWeighting / register_staleness_weighting — down-weighting of
+                                              stale buffered updates
+                                              before the server step
 """
 from repro.core.api import (  # noqa: F401
     Algorithm,
@@ -52,6 +60,25 @@ from repro.core.api import (  # noqa: F401
     run_rounds,
     run_rounds_cohort,
     server_optimizer_names,
+)
+from repro.core.availability import (  # noqa: F401
+    AvailabilityModel,
+    AvailabilityTrace,
+    Dispatch,
+    DispatchSimulator,
+    RecordingAvailability,
+    TraceAvailability,
+    availability_names,
+    make_availability,
+    record_trace,
+    register_availability,
+)
+from repro.core.async_engine import (  # noqa: F401
+    AsyncBufferedEngine,
+    StalenessWeighting,
+    make_staleness_weighting,
+    register_staleness_weighting,
+    staleness_weighting_names,
 )
 from repro.core.compression import (  # noqa: F401
     Compressor,

@@ -64,6 +64,7 @@ from repro.core.api import (
     run_rounds,
     run_rounds_cohort,
 )
+from repro.core.async_engine import AsyncBufferedEngine
 from repro.core.compression import (
     get_compressor,
     resolve_compressor,
@@ -162,11 +163,25 @@ class FederatedTrainer:
                  use_fused_update: bool = False, donate: bool = True,
                  pipeline_depth: int = 0, scan_rounds: int = 0,
                  store: str = "dense", store_backend: str = "",
-                 prefetch_depth: int = 2):
+                 prefetch_depth: int = 2, async_buffer: int = 0,
+                 max_inflight: int = 0,
+                 availability: Any = "always_on",
+                 availability_kwargs: Optional[Dict[str, Any]] = None,
+                 staleness_weighting: Any = "constant",
+                 staleness_kwargs: Optional[Dict[str, Any]] = None):
         assert pipeline_depth >= 0, pipeline_depth
         assert scan_rounds >= 0, scan_rounds
         assert store in ("dense", "tiered"), store
         assert prefetch_depth >= 1, prefetch_depth
+        assert async_buffer >= 0, async_buffer
+        if async_buffer and scan_rounds:
+            raise ValueError(
+                "async_buffer is incompatible with scan_rounds: the scanned "
+                "engine is a synchronous-cohort loop by construction")
+        if async_buffer and pipeline_depth:
+            raise ValueError(
+                "async_buffer is incompatible with pipeline_depth: the async "
+                "engine owns its own dispatch overlap")
         self.spec = spec
         self.dataset = dataset
         self.algorithm = get_algorithm(spec.algorithm)
@@ -228,6 +243,10 @@ class FederatedTrainer:
                 spec, self.server.x,
                 stateful_clients=self.algorithm.stateful_clients).items()}
         grad_fn = make_grad_fn(loss_fn)
+        # the async engine re-derives the per-dispatch client phase from
+        # these (core/async_engine.py — DESIGN.md §14)
+        self._grad_fn = grad_fn
+        self._use_fused_update = use_fused_update
 
         def round_fn(server, clients, batches, comp_key):
             return run_round(grad_fn, spec, server, clients, batches,
@@ -240,6 +259,16 @@ class FederatedTrainer:
         self.history = []
         self.pipeline_depth = int(pipeline_depth)
         self._prefetch: deque = deque()
+
+        # -- async buffered-aggregation mode (DESIGN.md §14) -------------
+        self.async_engine = None
+        if async_buffer:
+            self.async_engine = AsyncBufferedEngine(
+                self, buffer_size=async_buffer, max_inflight=max_inflight,
+                availability=availability,
+                availability_kwargs=availability_kwargs,
+                staleness_weighting=staleness_weighting,
+                staleness_kwargs=staleness_kwargs)
 
         # -- scanned-engine mode (DESIGN.md §10) -------------------------
         self.scan_rounds = int(scan_rounds)
@@ -340,6 +369,11 @@ class FederatedTrainer:
     def scan_active(self) -> bool:
         """True when rounds execute through the scanned engine."""
         return self._scan_mode
+
+    @property
+    def async_active(self) -> bool:
+        """True when rounds execute through the async buffered engine."""
+        return self.async_engine is not None
 
     def _scan_incompatibility(self) -> Optional[str]:
         """Why this config can't run the scanned engine (None = it can)."""
@@ -500,6 +534,10 @@ class FederatedTrainer:
         round under the host loop (pipelined: depth+1 cohorts)."""
         row = sum(st.row_nbytes for _, st in self._store_families())
         N, S = self.spec.num_clients, self.spec.num_sampled
+        if self.async_engine is not None:
+            # in-flight dispatch payloads + the aggregation buffer
+            eng = self.async_engine
+            return (eng.max_inflight + eng.buffer_size) * row
         if self._tiered_scan:
             return min(N, (chunk_rounds or self.scan_rounds) * S) * row
         if self._scan_mode:
@@ -693,6 +731,9 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
 
     def run_round(self) -> Dict[str, float]:
+        if self.async_engine is not None:
+            # one "round" = one buffered aggregation (DESIGN.md §14)
+            return self.async_engine.run_round()
         if self._scan_mode:
             # chunk of one — bit-for-bit the same trajectory as a larger
             # chunk (tests/test_scan_engine.py), so per-round driving and

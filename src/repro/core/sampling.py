@@ -39,6 +39,22 @@ class ClientSampler:
         return self._rng.choice(self.num_clients, size=self.num_sampled,
                                 replace=False)
 
+    def sample_available(self, pool: np.ndarray, size: int) -> np.ndarray:
+        """Sample up to ``size`` clients uniformly without replacement
+        from the currently-available ``pool`` (async engine, DESIGN.md
+        §14). Draws fewer when fewer are available; an empty pool (or
+        size<=0) consumes no randomness. With the full population
+        available and ``size == num_sampled`` this consumes the
+        generator *identically* to ``sample()`` (numpy's
+        ``Generator.choice`` treats an int ``n`` and ``arange(n)`` the
+        same) — the property that keeps the async engine's degenerate
+        limit bit-for-bit on the sync sampling trajectory."""
+        pool = np.asarray(pool)
+        n = min(int(size), pool.size)
+        if n <= 0:
+            return np.empty(0, np.int64)
+        return self._rng.choice(pool, size=n, replace=False)
+
     # JSON-serializable RNG state, for exact checkpoint/resume of the
     # sampling trajectory (checkpoint/checkpoint.py)
     def get_state(self) -> Dict[str, Any]:

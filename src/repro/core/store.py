@@ -345,12 +345,46 @@ class TieredClientStore(ClientStateStore):
         self._lock = threading.Lock()
         self._inflight: "OrderedDict[Any, _Prefetch]" = OrderedDict()
         self._writes: "deque[Future]" = deque()
+        self._poisoned: Optional[BaseException] = None
+
+    # -- worker-failure containment -------------------------------------
+    # An exception on the I/O worker (a failing backend write, a killed
+    # thread) must propagate *loudly* at the next public call, never hang
+    # the trainer or silently drop a queued writeback: every submitted
+    # task records its failure, and once poisoned the store refuses all
+    # further I/O with the original cause chained.
+
+    def _note_failure(self, fut: Future) -> None:
+        if not fut.cancelled():
+            exc = fut.exception()
+            if exc is not None and self._poisoned is None:
+                self._poisoned = exc
+
+    def _check_poisoned(self) -> None:
+        if self._poisoned is not None:
+            raise RuntimeError(
+                "tiered-store I/O worker previously failed — the store is "
+                "poisoned and its contents cannot be trusted (original "
+                "error chained below)") from self._poisoned
+
+    def _submit(self, fn, *args) -> Future:
+        self._check_poisoned()
+        try:
+            fut = self._exec.submit(fn, *args)
+        except RuntimeError as e:
+            # the executor was shut down underneath us (worker killed /
+            # store used after close): fail loudly instead of hanging
+            raise RuntimeError(
+                "tiered-store I/O worker is gone (executor shut down); "
+                "the store can no longer serve reads or writes") from e
+        fut.add_done_callback(self._note_failure)
+        return fut
 
     # -- synchronous API: ordered behind every pending write ------------
 
     def gather(self, ids: np.ndarray):
         ids = np.asarray(ids)
-        leaves = self._exec.submit(self._read, ids).result()
+        leaves = self._submit(self._read, ids).result()
         return jax.tree.unflatten(self._treedef, leaves)
 
     def scatter(self, ids: np.ndarray, new) -> None:
@@ -368,7 +402,7 @@ class TieredClientStore(ClientStateStore):
         with self._lock:
             for pf in self._inflight.values():
                 pf.written.append(ids)
-            fut = self._exec.submit(self._write, ids, leaves)
+            fut = self._submit(self._write, ids, leaves)
             self._writes.append(fut)
             # reap completed writes so the queue stays bounded (surfaces
             # worker exceptions early instead of only at flush)
@@ -388,7 +422,7 @@ class TieredClientStore(ClientStateStore):
             while len(self._inflight) >= self.prefetch_depth:
                 self._inflight.popitem(last=False)
             self._inflight[token] = _Prefetch(
-                ids, self._exec.submit(self._read, ids))
+                ids, self._submit(self._read, ids))
 
     def take(self, token, ids: np.ndarray):
         """Consume a prefetched gather: bit-for-bit what a synchronous
@@ -396,6 +430,7 @@ class TieredClientStore(ClientStateStore):
         prefetch was issued are re-read (the re-read serialises behind
         the writes on the worker); a miss or id mismatch falls back to a
         synchronous gather."""
+        self._check_poisoned()
         ids = np.asarray(ids)
         with self._lock:
             pf = self._inflight.pop(token, None)
@@ -423,6 +458,7 @@ class TieredClientStore(ClientStateStore):
     def flush(self) -> None:
         """Block until every queued writeback is durable in the backend
         (checkpointing reads the population through here)."""
+        self._check_poisoned()
         while True:
             with self._lock:
                 if not self._writes:
@@ -431,7 +467,13 @@ class TieredClientStore(ClientStateStore):
             fut.result()
 
     def close(self) -> None:
-        self.flush()
+        try:
+            self.flush()
+        except RuntimeError:
+            # closing a poisoned (or already-shut-down) store still
+            # releases its resources — the failure already surfaced (or
+            # will) through the public I/O API
+            pass
         self.drop_prefetches()
         if self._own_exec:
             self._exec.shutdown(wait=True)

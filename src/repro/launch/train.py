@@ -21,9 +21,11 @@ from repro.configs.base import FedRoundSpec
 from repro.core import (
     FederatedTrainer,
     algorithm_names,
+    availability_names,
     compressor_names,
     local_solver_names,
     server_optimizer_names,
+    staleness_weighting_names,
     store_backend_names,
 )
 from repro.optim.schedules import schedule_names
@@ -80,9 +82,10 @@ def main(argv=None):
                     help="per-local-step eta_l schedule (sgd_sched solver "
                          "only)")
     ap.add_argument("--list-registries", action="store_true",
-                    help="print the five strategy registries (algorithms, "
+                    help="print the seven strategy registries (algorithms, "
                          "server optimizers, compressors, local solvers, "
-                         "store backends) and exit")
+                         "store backends, availability models, staleness "
+                         "weightings) and exit")
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
     ap.add_argument("--compress", default="none",
@@ -95,6 +98,38 @@ def main(argv=None):
                     choices=list(compressor_names()),
                     help="codec for the server->client (x, c) broadcast")
     ap.add_argument("--pipeline-depth", type=int, default=0)
+    ap.add_argument("--async-buffer", type=int, default=0,
+                    help="async buffered-aggregation engine: aggregate once "
+                         "this many client updates land (0 = synchronous; "
+                         "DESIGN.md §14)")
+    ap.add_argument("--max-inflight", type=int, default=0,
+                    help="async concurrency cap K: dispatches kept in "
+                         "flight (0 = num_sampled)")
+    ap.add_argument("--availability", default="always_on",
+                    choices=list(availability_names()),
+                    help="async client availability model (trace-driven, "
+                         "seeded, wall-clock-free)")
+    ap.add_argument("--availability-seed", type=int, default=0,
+                    help="seed of the availability model's latency/dropout "
+                         "draws (independent of --seed)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-dispatch death probability of the uniform/"
+                         "lognormal availability models")
+    ap.add_argument("--latency-sigma", type=float, default=1.0,
+                    help="lognormal availability: log-space sigma of the "
+                         "per-dispatch latency (the straggler-tail knob)")
+    ap.add_argument("--availability-trace", default="",
+                    help="replay a recorded availability trace from this "
+                         "JSON path (--availability trace)")
+    ap.add_argument("--staleness-weighting", default="constant",
+                    choices=list(staleness_weighting_names()),
+                    help="async staleness down-weighting of buffered "
+                         "updates (applied before the server optimizer)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="polynomial staleness weighting: 1/(1+tau)^alpha")
+    ap.add_argument("--staleness-cutoff", type=float, default=10.0,
+                    help="cutoff staleness weighting: drop updates staler "
+                         "than this many versions")
     ap.add_argument("--scan-rounds", type=int, default=0,
                     help="scanned-engine chunk size: run rounds on device "
                          "in lax.scan chunks of up to this many (0 = host "
@@ -134,6 +169,8 @@ def main(argv=None):
             ("compressors", compressor_names()),
             ("local_solvers", local_solver_names()),
             ("store_backends", store_backend_names()),
+            ("availability_models", availability_names()),
+            ("staleness_weightings", staleness_weighting_names()),
         ):
             print(f"{title}: {' '.join(names)}")
         return None
@@ -166,13 +203,36 @@ def main(argv=None):
           f"algo={args.algorithm} N={args.clients} S={args.sampled} "
           f"K={args.local_steps} b={args.local_batch}")
 
+    availability_kwargs = {}
+    if args.availability == "trace":
+        availability_kwargs["trace"] = args.availability_trace
+    elif args.availability != "always_on":
+        availability_kwargs.update(seed=args.availability_seed,
+                                   dropout=args.dropout)
+        if args.availability == "lognormal":
+            availability_kwargs["sigma"] = args.latency_sigma
+    staleness_kwargs = {}
+    if args.staleness_weighting == "polynomial":
+        staleness_kwargs["alpha"] = args.staleness_alpha
+    elif args.staleness_weighting == "cutoff":
+        staleness_kwargs["cutoff"] = args.staleness_cutoff
     trainer = FederatedTrainer(
         partial(M.loss_fn, cfg), partial(M.init_params, cfg), spec, data,
         seed=args.seed, pipeline_depth=args.pipeline_depth,
         scan_rounds=args.scan_rounds, store=args.store,
         store_backend=args.store_backend,
         prefetch_depth=args.prefetch_depth,
+        async_buffer=args.async_buffer, max_inflight=args.max_inflight,
+        availability=args.availability,
+        availability_kwargs=availability_kwargs,
+        staleness_weighting=args.staleness_weighting,
+        staleness_kwargs=staleness_kwargs,
     )
+    if trainer.async_active:
+        eng = trainer.async_engine
+        print(f"async engine: aggregate {eng.buffer_size} of "
+              f"{eng.max_inflight} in flight, availability="
+              f"{args.availability}, staleness={args.staleness_weighting}")
     if trainer.scan_active:
         print(f"scanned engine: on-device chunks of <= {args.scan_rounds} "
               f"rounds")

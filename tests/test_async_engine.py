@@ -1,0 +1,278 @@
+"""Async buffered-aggregation engine (DESIGN.md §14): the FedBuff-style
+fourth execution mode, anchored to the paper's synchronous semantics.
+
+The acceptance contract, end-to-end:
+
+  * degenerate limit — with buffer_size == max_inflight == S, an
+    always-on availability model (zero latency, no dropout) and constant
+    staleness weighting, the async engine is *bit-for-bit* the sync host
+    loop: server state, every client-store / residual row, and the
+    per-round metric values, across {scaffold, scaffold_m} x
+    {none, int8_ef} x {sgd, adam} and the RNG-consuming EMNIST loader,
+  * out-of-order correctness — per-client control variates and
+    error-feedback residuals keep their row identities through straggler
+    reordering (tiered store == dense store bitwise under lognormal
+    latency + dropout),
+  * fault injection — a client that dies mid-round surfaces as dropped:
+    its update is never delivered, its rows are untouched, and the
+    dropped counters account for it,
+  * staleness weighting — polynomial down-weighting changes the server
+    trajectory only when staleness is actually nonzero; a cutoff of 0
+    rejects every stale update,
+  * checkpoint/resume — a mid-buffer, mid-flight save restores every
+    pending update durably: resumed trajectory == unbroken run, bitwise
+    (the §14 counterpart of test_checkpoint_roundtrip.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_trainer, save_trainer
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import (
+    EmnistLikeFederated,
+    make_similarity_quadratics,
+    quadratic_loss,
+)
+from repro.models.simple import logreg_init, logreg_loss
+
+N, S, DIM = 20, 5, 6
+
+STRAGGLER = dict(availability="lognormal",
+                 availability_kwargs=dict(seed=1, sigma=1.5, dropout=0.2))
+
+
+def _quad_trainer(seed=7, *, algorithm="scaffold", compress="none",
+                  server_optimizer="", **kw):
+    spec = FedRoundSpec(num_clients=N, num_sampled=S, local_steps=4,
+                        local_batch=4, eta_l=0.05, eta_g=1.0,
+                        algorithm=algorithm, compress=compress,
+                        server_optimizer=server_optimizer)
+    data = make_similarity_quadratics(N, DIM, delta=0.5, G=1.0, seed=3)
+    init = lambda key: {"x": jnp.zeros((DIM,), jnp.float32)}
+    return FederatedTrainer(quadratic_loss, init, spec, data, seed=seed, **kw)
+
+
+def _emnist_trainer(seed=0, **kw):
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=10, num_sampled=3,
+                        local_steps=2, local_batch=4, eta_l=0.1,
+                        compress="int8_ef")
+    data = EmnistLikeFederated(num_clients=10, samples=400,
+                               similarity_pct=0.0, seed=0, test_samples=40)
+    return FederatedTrainer(logreg_loss, lambda k: logreg_init(k, 784, 62),
+                            spec, data, seed=seed, **kw)
+
+
+def _state(tr):
+    ids = np.arange(tr.store.num_clients)
+    leaves = (jax.tree.leaves(tr.x) + jax.tree.leaves(tr.c)
+              + jax.tree.leaves(tr.server.opt_state)
+              + jax.tree.leaves(tr.store.gather(ids)))
+    if tr.residual_store is not None:
+        leaves += jax.tree.leaves(tr.residual_store.gather(ids))
+    return [np.asarray(leaf) for leaf in leaves]
+
+
+def _assert_bitwise(a, b):
+    assert len(a) == len(b)
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(xa, xb)
+
+
+# ------------------------------------------------- degenerate equivalence
+
+SYNC_METRICS = ("loss", "drift", "update_norm", "bytes_up", "bytes_down",
+                "round")
+
+
+@pytest.mark.parametrize("algorithm,compress,server_opt", [
+    ("scaffold", "none", ""),
+    ("scaffold", "int8_ef", ""),
+    ("scaffold", "none", "adam"),
+    ("scaffold", "int8_ef", "adam"),
+    ("scaffold_m", "none", ""),
+    ("scaffold_m", "int8_ef", ""),
+    ("scaffold_m", "none", "adam"),
+    ("scaffold_m", "int8_ef", "adam"),
+])
+def test_degenerate_limit_is_bitwise_sync(algorithm, compress, server_opt):
+    """M == K == S, always-on, zero latency, constant weighting: the async
+    engine must reproduce FederatedTrainer(pipeline_depth=0) exactly."""
+    kw = dict(algorithm=algorithm, compress=compress,
+              server_optimizer=server_opt)
+    sync = _quad_trainer(**kw)
+    poof = _quad_trainer(**kw, async_buffer=S, max_inflight=S)
+    assert poof.async_active
+    for _ in range(6):
+        ms, ma = sync.run_round(), poof.run_round()
+        for key in SYNC_METRICS:
+            assert ms[key] == ma[key], (key, ms[key], ma[key])
+    _assert_bitwise(_state(sync), _state(poof))
+
+
+def test_degenerate_limit_emnist_loader():
+    """Same anchor through the data-RNG-consuming EMNIST-like loader."""
+    sync = _emnist_trainer()
+    poof = _emnist_trainer(async_buffer=3, max_inflight=3)
+    for _ in range(5):
+        ms, ma = sync.run_round(), poof.run_round()
+        for key in SYNC_METRICS:
+            assert ms[key] == ma[key], key
+    _assert_bitwise(_state(sync), _state(poof))
+
+
+# ------------------------------------------------ out-of-order correctness
+
+ASYNC_KW = dict(async_buffer=3, max_inflight=6,
+                staleness_weighting="polynomial",
+                staleness_kwargs=dict(alpha=0.5), **STRAGGLER)
+
+
+def test_tiered_store_matches_dense_under_stragglers():
+    dense = _quad_trainer(compress="int8_ef", **ASYNC_KW)
+    tiered = _quad_trainer(compress="int8_ef", store="tiered", **ASYNC_KW)
+    try:
+        for _ in range(8):
+            md, mt = dense.run_round(), tiered.run_round()
+            assert md == mt
+        _assert_bitwise(_state(dense), _state(tiered))
+    finally:
+        tiered.close()
+
+
+def test_observability_fields():
+    tr = _quad_trainer(**ASYNC_KW)
+    m = tr.run_round()
+    for key in ("staleness_mean", "staleness_max", "staleness_hist",
+                "buffer_occupancy", "inflight", "dispatched", "dropped",
+                "dropped_total", "sim_time", "sim_rounds_per_s"):
+        assert key in m, key
+    assert sum(m["staleness_hist"]) == tr.async_engine.buffer_size
+    assert m["sim_time"] > 0.0
+
+
+def test_run_and_history_work_in_async_mode():
+    tr = _quad_trainer(**ASYNC_KW)
+    tr.run(4)
+    assert len(tr.history) == 4
+    assert [h["round"] for h in tr.history] == [1, 2, 3, 4]
+    assert tr.round_idx == 4
+
+
+# ------------------------------------------------------- fault injection
+
+def test_dropped_update_never_lands():
+    """Force every dispatch of one client to die: its rows stay at their
+    initial values and the dropped counters see every death."""
+    from repro.core.availability import UniformLatency
+
+    class KillClient(UniformLatency):
+        def __init__(self, victim, **kw):
+            super().__init__(**kw)
+            self.victim = victim
+
+        def fate(self, client, k):
+            lat, dropped = super().fate(client, k)
+            return lat, dropped or client == self.victim
+
+    victim = 4
+    model = KillClient(victim, seed=2, lo=0.5, hi=1.5)
+    tr = _quad_trainer(compress="int8_ef", async_buffer=3, max_inflight=6,
+                       availability=model)
+    rows0 = jax.tree.map(np.array, tr.store.gather(np.array([victim])))
+    res0 = jax.tree.map(np.array,
+                        tr.residual_store.gather(np.array([victim])))
+    total = 0
+    for _ in range(40):
+        total += tr.run_round()["dropped"]
+        if tr.async_engine.sim.dispatch_k[victim] >= 2:
+            break
+    assert tr.async_engine.sim.dispatch_k[victim] > 0  # actually dispatched
+    assert total == tr.async_engine.dropped_total > 0
+    _assert_bitwise(jax.tree.leaves(rows0),
+                    [np.asarray(x) for x in
+                     jax.tree.leaves(tr.store.gather(np.array([victim])))])
+    _assert_bitwise(jax.tree.leaves(res0),
+                    [np.asarray(x) for x in jax.tree.leaves(
+                        tr.residual_store.gather(np.array([victim])))])
+
+
+# ---------------------------------------------------- staleness weighting
+
+def test_staleness_weighting_changes_the_trajectory():
+    base = dict(async_buffer=2, max_inflight=6, **STRAGGLER)
+    const = _quad_trainer(**base, staleness_weighting="constant")
+    poly = _quad_trainer(**base, staleness_weighting="polynomial",
+                         staleness_kwargs=dict(alpha=2.0))
+    saw_stale = False
+    diverged = False
+    for _ in range(10):
+        mc, mp = const.run_round(), poly.run_round()
+        saw_stale = saw_stale or mc["staleness_max"] > 0
+        diverged = diverged or mc["loss"] != mp["loss"]
+    assert saw_stale and diverged
+
+
+def test_cutoff_zero_freezes_on_stale_buffers():
+    """cutoff=0 zeroes every aggregation whose buffer is all-stale: the
+    server must no-op (not NaN) on those rounds."""
+    tr = _quad_trainer(async_buffer=2, max_inflight=6,
+                       staleness_weighting="cutoff",
+                       staleness_kwargs=dict(cutoff=0.0), **STRAGGLER)
+    for _ in range(10):
+        m = tr.run_round()
+        assert np.isfinite(m["update_norm"])
+        if m["staleness_max"] > 0 and m["staleness_mean"] == m["staleness_max"]:
+            pass  # all-stale buffer: survived as a no-op step
+    assert np.all(np.isfinite(np.asarray(jax.tree.leaves(tr.x)[0])))
+
+
+# --------------------------------------------------- validation surface
+
+def test_async_rejects_scan_and_pipeline():
+    with pytest.raises(ValueError, match="scanned"):
+        _quad_trainer(async_buffer=2, scan_rounds=4)
+    with pytest.raises(ValueError, match="async"):
+        _quad_trainer(async_buffer=2, pipeline_depth=1)
+
+
+def test_async_rejects_whole_batch_algorithms():
+    with pytest.raises(ValueError):
+        _quad_trainer(algorithm="sgd", async_buffer=2)
+
+
+# ---------------------------------------------------- checkpoint/resume
+
+def test_mid_buffer_checkpoint_resume_is_bitwise(tmp_path):
+    """Save with updates both in flight and sitting in the buffer
+    (M < K guarantees pending state), restore into a wrong-seed trainer,
+    and the resumed trajectory must equal the unbroken run bitwise —
+    including the straggler event stream and every metric."""
+    kw = dict(compress="int8_ef", server_optimizer="adam", **ASYNC_KW)
+    full = _quad_trainer(**kw)
+    hist_full = [full.run_round() for _ in range(8)]
+
+    part = _quad_trainer(**kw)
+    hist_part = [part.run_round() for _ in range(4)]
+    eng = part.async_engine
+    assert len(eng._inflight) + len(eng._buffer) > 0  # genuinely mid-state
+    path = str(tmp_path / "async_ckpt")
+    save_trainer(path, part)
+
+    resumed = _quad_trainer(seed=99, **kw)  # restore must overwrite all
+    load_trainer(path, resumed)
+    hist_res = hist_part + [resumed.run_round() for _ in range(4)]
+    assert hist_full == hist_res
+    _assert_bitwise(_state(full), _state(resumed))
+
+
+def test_sync_checkpoint_into_async_trainer_fails_loudly(tmp_path):
+    sync = _quad_trainer()
+    sync.run_round()
+    path = str(tmp_path / "sync_ckpt")
+    save_trainer(path, sync)
+    poof = _quad_trainer(async_buffer=S, max_inflight=S)
+    with pytest.raises(AssertionError, match="async"):
+        load_trainer(path, poof)

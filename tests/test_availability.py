@@ -1,0 +1,277 @@
+"""Availability-simulator property tests (DESIGN.md §14).
+
+The async engine's determinism contract rests on the availability layer,
+so these are hypothesis-driven where the state space is big:
+
+  * event ordering — the dispatch simulator pops completions in
+    non-decreasing virtual time, and its clock never goes backwards,
+  * trace replay identity — recording a seeded model and replaying the
+    trace reproduces every (latency, dropped) fate bit-for-bit, and the
+    JSON round-trips losslessly,
+  * no delivery after dropout — a dispatch whose recorded fate is
+    ``dropped`` is surfaced exactly once as dropped and its client's
+    rows are never scattered (asserted end-to-end in
+    test_async_engine.py; here at the simulator layer),
+  * sampling under partial availability — ``sample_available`` is
+    deterministic given (seed, pool), never returns an id outside the
+    pool, and consumes the numpy stream exactly like ``sample`` when
+    the pool is the full population (the degenerate-limit anchor),
+
+plus unit tests for the availability registry, duty-cycle windows, and
+``DispatchSimulator`` invariants (busy-set exclusivity, fill bounds).
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # Degrade per-test instead of importorskip'ing the module: the unit /
+    # registry tests below need no hypothesis and must run everywhere.
+    # The skip reason matches check_skips.py's missing-optional-dependency
+    # pattern so CI still proves the property tests execute there.
+    def given(**kw):
+        return lambda fn: pytest.mark.skip(
+            reason="could not import 'hypothesis'")(fn)
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 — stands in for hypothesis.strategies
+        integers = staticmethod(lambda a, b: None)
+
+from repro.core import (
+    AvailabilityTrace,
+    DispatchSimulator,
+    RecordingAvailability,
+    TraceAvailability,
+    availability_names,
+    make_availability,
+    register_availability,
+)
+from repro.core.sampling import ClientSampler
+
+N = 12
+
+
+def _sim(model, *, seed=0, num_sampled=4, max_inflight=6):
+    sampler = ClientSampler(N, num_sampled, seed=seed)
+    return DispatchSimulator(model, sampler, N, max_inflight)
+
+
+def _drain(sim, pops):
+    """Run the fill/pop loop for ``pops`` completions; return the events."""
+    events = []
+    while len(events) < pops:
+        if sim.should_fill():
+            sim.fill()
+        if not sim.pending():
+            sim.advance_to_available()
+            continue
+        events.append(sim.pop())
+    return events
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_names_and_errors():
+    names = availability_names()
+    assert {"always_on", "uniform", "lognormal", "trace"} <= set(names)
+    assert list(names) == sorted(names)
+    with pytest.raises(KeyError):
+        make_availability("nope")
+    register_availability("_test_avail", lambda **kw: make_availability(
+        "always_on"))
+    assert "_test_avail" in availability_names()
+
+
+def test_always_on_is_the_sync_anchor():
+    m = make_availability("always_on")
+    assert m.fate(3, 0) == (0.0, False)
+    ids = np.arange(N)
+    assert m.available(ids, 0.0).all()
+    assert m.next_available(ids, 1.5) == 1.5
+
+
+# ------------------------------------------------------- seeded models
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1), client=st.integers(0, N - 1),
+       k=st.integers(0, 50))
+def test_fate_is_a_pure_function_of_seed_client_k(seed, client, k):
+    a = make_availability("lognormal", seed=seed, dropout=0.3)
+    b = make_availability("lognormal", seed=seed, dropout=0.3)
+    assert a.fate(client, k) == b.fate(client, k)
+    lat, _ = a.fate(client, k)
+    assert lat >= 0.0
+
+
+def test_uniform_latency_bounds():
+    m = make_availability("uniform", seed=1, lo=0.25, hi=0.75)
+    lats = [m.fate(c, k)[0] for c in range(N) for k in range(5)]
+    assert all(0.25 <= lt <= 0.75 for lt in lats)
+    assert len(set(lats)) > 1  # actually stochastic across dispatches
+
+
+def test_lognormal_client_speed_is_persistent():
+    m = make_availability("lognormal", seed=2, sigma=0.0, client_sigma=1.0)
+    # sigma=0 kills per-dispatch noise: latency is the per-client speed
+    per_client = [{m.fate(c, k)[0] for k in range(4)} for c in range(N)]
+    assert all(len(s) == 1 for s in per_client)
+    assert len({next(iter(s)) for s in per_client}) > 1
+
+
+def test_dropout_rate_is_roughly_honoured():
+    m = make_availability("uniform", seed=3, dropout=0.5)
+    drops = sum(m.fate(c, k)[1] for c in range(N) for k in range(100))
+    assert 0.35 * N * 100 < drops < 0.65 * N * 100
+
+
+def test_duty_cycle_windows_and_next_available():
+    m = make_availability("uniform", seed=4, duty=0.5, period=10.0)
+    ids = np.arange(N)
+    avail_now = m.available(ids, 0.0)
+    assert avail_now.any() and not avail_now.all()
+    for i in np.flatnonzero(~avail_now):
+        t_next = m.next_available(ids[i:i + 1], 0.0)
+        assert t_next > 0.0
+        # the client really is available at its promised window start
+        assert m.available(ids[i:i + 1], t_next + 1e-9).all()
+
+
+# ------------------------------------------------------------ trace replay
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_trace_replay_identity(seed):
+    inner = make_availability("lognormal", seed=seed, dropout=0.25)
+    rec = RecordingAvailability(inner)
+    fates = {(c, k): rec.fate(c, k) for c in range(N) for k in range(6)}
+    replay = TraceAvailability(
+        AvailabilityTrace.from_json(rec.trace.to_json()))
+    for (c, k), fate in fates.items():
+        assert replay.fate(c, k) == fate
+
+
+def test_trace_json_roundtrip_and_file(tmp_path):
+    inner = make_availability("uniform", seed=9, dropout=0.4)
+    rec = RecordingAvailability(inner)
+    for c in range(4):
+        rec.fate(c, 0)
+    path = str(tmp_path / "trace.json")
+    rec.trace.save(path)
+    replay = make_availability("trace", trace=path)
+    for c in range(4):
+        assert replay.fate(c, 0) == inner.fate(c, 0)
+    payload = json.loads(open(path).read())
+    assert payload["format"] == "availability-trace/v1"
+
+
+def test_trace_unrecorded_dispatch_is_a_clear_error():
+    replay = TraceAvailability(AvailabilityTrace())
+    with pytest.raises(KeyError, match="diverged"):
+        replay.fate(0, 0)
+
+
+# --------------------------------------------------- dispatch simulator
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**31 - 1), pops=st.integers(1, 40))
+def test_event_ordering_clock_never_goes_backwards(seed, pops):
+    sim = _sim(make_availability("lognormal", seed=seed, dropout=0.2),
+               seed=seed)
+    events = _drain(sim, pops)
+    times = [e.complete_t for e in events]
+    assert times == sorted(times)
+    assert sim.clock == times[-1]
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**31 - 1), pops=st.integers(1, 40))
+def test_replayed_trace_reproduces_the_event_stream(seed, pops):
+    rec = RecordingAvailability(
+        make_availability("lognormal", seed=seed, dropout=0.2))
+    live = _drain(_sim(rec, seed=seed), pops)
+    replayed = _drain(_sim(TraceAvailability(rec.trace), seed=seed), pops)
+    assert live == replayed
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**31 - 1), pops=st.integers(1, 60))
+def test_dropped_dispatches_surface_exactly_once(seed, pops):
+    sim = _sim(make_availability("uniform", seed=seed, dropout=0.5),
+               seed=seed)
+    events = _drain(sim, pops)
+    seen = set()
+    for e in events:
+        assert (e.client, e.k) not in seen  # no double delivery, ever
+        seen.add((e.client, e.k))
+    # a dropped dispatch frees its client for re-dispatch with a new k
+    ks = {}
+    for e in events:
+        assert ks.get(e.client, -1) < e.k
+        ks[e.client] = e.k
+
+
+def test_busy_clients_are_never_redispatched():
+    sim = _sim(make_availability("lognormal", seed=5), max_inflight=8)
+    sim.fill()
+    inflight = sim.inflight_clients()
+    assert len(inflight) == len(set(inflight))
+    before = set(inflight)
+    # a second fill with slots free must not re-pick busy clients
+    sim.clock += 1e-9
+    if sim.should_fill():
+        sim.fill()
+    after = sim.inflight_clients()
+    assert len(after) == len(set(after))
+    assert before <= set(after)
+
+
+# --------------------------------- sampling under partial availability
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1), lo=st.integers(0, N - 2),
+       size=st.integers(1, N))
+def test_sample_available_stays_inside_the_pool(seed, lo, size):
+    pool = np.arange(lo, N)
+    a = ClientSampler(N, size, seed=seed).sample_available(pool, size)
+    b = ClientSampler(N, size, seed=seed).sample_available(pool, size)
+    assert np.array_equal(a, b)  # deterministic given the seed
+    assert set(a.tolist()) <= set(pool.tolist())
+    assert len(set(a.tolist())) == len(a)  # without replacement
+    assert len(a) == min(size, len(pool))  # degrades, never blocks
+
+
+def test_sample_available_full_pool_matches_sample():
+    # the degenerate-limit anchor: over the full population the two draws
+    # consume the numpy stream identically, so async always_on == sync
+    for seed in (0, 1, 7):
+        s1 = ClientSampler(N, 5, seed=seed)
+        s2 = ClientSampler(N, 5, seed=seed)
+        for _ in range(10):
+            assert np.array_equal(s1.sample(),
+                                  s2.sample_available(np.arange(N), 5))
+
+
+def test_sample_available_empty_pool_consumes_no_randomness():
+    s1 = ClientSampler(N, 5, seed=11)
+    s2 = ClientSampler(N, 5, seed=11)
+    assert s1.sample_available(np.arange(0), 5).size == 0
+    assert np.array_equal(s1.sample(), s2.sample())
+
+
+def test_unavailable_clients_are_never_dispatched():
+    m = make_availability("uniform", seed=6, duty=0.4, period=8.0)
+    sim = _sim(m, seed=6, max_inflight=N)
+    for _ in range(30):
+        if sim.should_fill():
+            sim.fill()
+            for _, _, d in list(sim._heap):
+                assert m.available(np.array([d.client]), d.time).all()
+        if sim.pending():
+            sim.pop()
+        else:
+            sim.advance_to_available()

@@ -271,3 +271,98 @@ def test_population_and_row_nbytes():
     assert store.row_nbytes == (3 + 2) * 4
     assert store.population_nbytes == N * store.row_nbytes
     store.close()
+
+
+# ---------------------------------------------------------------------------
+# worker-failure containment (ISSUE-7 satellite): an exception on the I/O
+# worker must poison the store loudly — never hang, never silently drop a
+# queued writeback, never serve reads from a store whose write queue died.
+
+class _FailingBackend(type(make_store_backend("dense"))):
+    """Dense backend whose writes can be armed to fail."""
+
+    def __init__(self):
+        super().__init__()
+        self.fail_writes = False
+
+    def write_rows(self, handle, ids, rows):
+        if self.fail_writes:
+            raise OSError("disk on fire")
+        super().write_rows(handle, ids, rows)
+
+
+def _tiered_failing():
+    backend = _FailingBackend()
+    store = TieredClientStore(TEMPLATE, N, backend=backend)
+    return store, backend
+
+
+def _await_poison(store):
+    """The poison flag is set by the future's done-callback on the worker
+    thread; give it a beat before asserting the poisoned behaviour."""
+    import time
+
+    for _ in range(500):
+        if store._poisoned is not None:
+            return
+        time.sleep(0.002)
+    raise AssertionError("store never noted the worker failure")
+
+
+def test_failed_async_write_poisons_the_store():
+    store, backend = _tiered_failing()
+    rng = np.random.default_rng(0)
+    ids = np.array([1, 2])
+    store.scatter(ids, _rows(rng, ids))  # healthy first
+    backend.fail_writes = True
+    # the eager reap in scatter_async may surface the error there already
+    with pytest.raises(OSError, match="disk on fire"):
+        store.scatter_async(ids, _rows(rng, ids)).result()
+    _await_poison(store)
+    # every subsequent public call fails loudly with the cause chained
+    for call in (lambda: store.flush(), lambda: store.gather(ids),
+                 lambda: store.scatter_async(ids, _rows(rng, ids))):
+        with pytest.raises(RuntimeError, match="poisoned") as ei:
+            call()
+        assert isinstance(ei.value.__cause__, OSError)
+    # close() must still release resources despite the poison
+    store.close()
+
+
+def test_flush_surfaces_worker_failure():
+    store, backend = _tiered_failing()
+    rng = np.random.default_rng(1)
+    ids = np.array([0, 4])
+    backend.fail_writes = True
+    with pytest.raises((OSError, RuntimeError)):
+        store.scatter_async(ids, _rows(rng, ids))
+        store.flush()
+    store.close()
+
+
+def test_shutdown_executor_is_a_clear_error_not_a_hang():
+    store, _ = _tiered_failing()
+    store._exec.shutdown(wait=True)  # simulate a killed worker
+    rng = np.random.default_rng(2)
+    ids = np.array([3])
+    with pytest.raises(RuntimeError, match="worker is gone"):
+        store.gather(ids)
+    with pytest.raises(RuntimeError, match="worker is gone"):
+        store.scatter_async(ids, _rows(rng, ids))
+
+
+def test_poison_does_not_leak_across_stores():
+    bad, backend = _tiered_failing()
+    good = _make("dense", tiered=True)
+    rng = np.random.default_rng(3)
+    ids = np.array([5])
+    backend.fail_writes = True
+    with pytest.raises((OSError, RuntimeError)):
+        bad.scatter_async(ids, _rows(rng, ids))
+        bad.flush()
+    rows = _rows(rng, ids)
+    good.scatter_async(ids, rows)
+    good.flush()  # unaffected sibling store keeps working
+    _assert_rows_equal(rows, good.gather(ids))
+    good.close()
+    bad.close()
