@@ -24,6 +24,22 @@ def check(path: str) -> None:
             assert record["mode"] in ROUND_MODES, record
             assert record["rounds_per_s"] > 0, record
             assert "kernel_launches_per_step_packed" in record, record
+        mega = [r for r in records if r.get("megakernel")]
+        assert mega, "round bench must carry the megakernel rows"
+        for record in mega:
+            # acceptance (DESIGN.md §15): ONE pallas_call per dtype group
+            # per ROUND — the K·groups per-step launches collapse to groups
+            assert record["pallas_calls_per_round"] == (
+                record["dtype_groups"]), record
+            assert record["speedup_vs_per_step"] > 0, record
+            baselines = [
+                r for r in records
+                if r["arch"] == record["arch"]
+                and r.get("variant") == "per_step_fused"]
+            assert baselines, f"no per-step baseline for {record['arch']}"
+            for base in baselines:
+                assert base["pallas_calls_per_round"] == (
+                    base["local_steps"] * base["dtype_groups"]), base
     if payload["bench"] == "local_solver":
         solvers = {record["solver"] for record in records}
         assert "sgd" in solvers, solvers  # the paper-baseline row

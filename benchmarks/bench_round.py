@@ -16,13 +16,21 @@ paths (per-leaf vs packed, via jaxpr inspection in interpret mode).
 Emits one ``scaffold-bench/v1`` record per (arch, mode) —
 ``python -m benchmarks.bench_round`` writes them to ``BENCH_round.json``
 (the CI perf-trajectory artifact).
+
+The megakernel acceptance rows (DESIGN.md §15) also always ride along:
+the scanned engine with ``use_megakernel=True`` (whole K-step local loop
+fused into ONE ``pallas_call`` per dtype group per round) vs the same
+trainer on the per-step fused path, with per-round launch counts
+(K·groups → groups), the rounds/s speedup, and the trajectory deviation.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import bench_argparser, bench_cli
 from repro.configs import get_reduced
@@ -42,6 +50,11 @@ MODES = ("sync", "pipelined", "scanned")
 # it gets a paper-scale chunk regardless of --iters.
 QUAD_ARCH = "quadratics-n20-d20"
 QUAD_ITERS = 64
+# the megakernel acceptance row (DESIGN.md §15): d=64 quadratics, where
+# the K-step local loop dominates the scanned round and fusing it pays
+QUAD_MEGA_DIM = 64
+QUAD_MEGA_STEPS = 10
+QUAD_MEGA_ARCH = f"quadratics-n20-d{QUAD_MEGA_DIM}"
 
 
 def _make_trainer(cfg, *, pipeline_depth: int = 0, scan_rounds: int = 0,
@@ -102,6 +115,92 @@ def bench_quadratics(*, iters: int = QUAD_ITERS, seed: int = 0):
     return _time_modes(make_trainer, iters)
 
 
+def megakernel_launch_counts(spec_mega, spec_step, dim: int, K: int):
+    """Per-ROUND pallas_call launch counts of one client's K-step local
+    loop (jaxpr inspection in interpret mode, scan trip counts included):
+    the megakernel path issues (dtype groups) launches per round, the
+    per-step fused path K·(dtype groups)."""
+    from repro.core.controller import make_grad_fn
+    from repro.core.local_solver import run_local_steps
+
+    grad_fn = make_grad_fn(quadratic_loss)
+    y0 = {"x": jnp.ones((dim,), jnp.float32)}
+    corr = {"x": jnp.zeros((dim,), jnp.float32)}
+    batches = {"A": jnp.ones((K, 1, dim, dim), jnp.float32),
+               "b": jnp.ones((K, 1, dim), jnp.float32)}
+    out = {}
+    with fused_ops.force_interpret():
+        for name, sp in (("megakernel", spec_mega),
+                         ("per_step_fused", spec_step)):
+            out[name] = fused_ops.count_pallas_launches(
+                lambda y, b, c, sp=sp: run_local_steps(
+                    grad_fn, sp, y, b, correction=c,
+                    use_fused_update=True)[0],
+                y0, batches, corr)
+    return out
+
+
+def bench_megakernel(*, iters: int = QUAD_ITERS, seed: int = 0,
+                     dim: int = QUAD_MEGA_DIM, K: int = QUAD_MEGA_STEPS):
+    """The megakernel acceptance rows: scanned rounds/s with the fused
+    K-step loop vs the per-step fused path, same seed — plus per-round
+    launch counts and the final-parameter deviation between the two."""
+    ds = make_similarity_quadratics(20, dim, delta=0.3, G=8.0, mu=0.3,
+                                    seed=seed)
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=20, num_sampled=4,
+                        local_steps=K, local_batch=1, eta_l=0.1)
+    specs = {"per_step_fused": spec,
+             "megakernel": dataclasses.replace(spec, use_megakernel=True)}
+    us, final_x = {}, {}
+    for variant, sp in specs.items():
+        init = lambda key: {"x": jnp.ones((dim,), jnp.float32)}  # noqa: E731
+        tr = FederatedTrainer(quadratic_loss, init, sp, ds, seed=seed,
+                              use_fused_update=True, scan_rounds=iters)
+        assert tr.scan_active, tr.scan_fallback_reason
+        if sp.use_megakernel:
+            assert tr.megakernel_fallback_reason == "", (
+                tr.megakernel_fallback_reason)
+        tr.run(iters)  # compile the R=iters chunk outside timing
+        t0 = time.perf_counter()
+        tr.run(iters)
+        jax.block_until_ready(tr.x)
+        us[variant] = (time.perf_counter() - t0) / iters * 1e6
+        final_x[variant] = np.asarray(tr.x["x"])
+    launches = megakernel_launch_counts(
+        specs["megakernel"], specs["per_step_fused"], dim, K)
+    traj_err = float(np.max(np.abs(
+        final_x["megakernel"] - final_x["per_step_fused"])))
+    speedup = us["per_step_fused"] / max(us["megakernel"], 1e-9)
+    rows = []
+    for variant in ("per_step_fused", "megakernel"):
+        mega = variant == "megakernel"
+        rows.append({
+            "bench": "round",
+            "arch": QUAD_MEGA_ARCH,
+            "mode": "scanned",
+            "variant": variant,
+            "megakernel": mega,
+            "us_per_round": us[variant],
+            "rounds_per_s": 1e6 / max(us[variant], 1e-9),
+            "scan_chunk": iters,
+            "local_steps": K,
+            "dtype_groups": 1,  # single fp32 param leaf
+            "pallas_calls_per_round": launches[variant],
+            # per-step accounting for the generic round-schema assert: the
+            # megakernel has no per-step launches at all (one per round)
+            "kernel_launches_per_step_packed": 0 if mega else (
+                launches[variant] // K),
+            "speedup_vs_per_step": speedup if mega else 1.0,
+            "traj_max_err": traj_err,
+        })
+    print(f"round_{QUAD_MEGA_ARCH}: per-step fused "
+          f"{us['per_step_fused']/1e3:8.3f} ms/round | megakernel "
+          f"{us['megakernel']/1e3:8.3f} ms/round ({speedup:.2f}x) | "
+          f"launches/round {launches['per_step_fused']} -> "
+          f"{launches['megakernel']} | traj err {traj_err:.1e}")
+    return rows
+
+
 def kernel_launch_counts(arch: str):
     """Per-local-step pallas_call counts of the fused update over the
     arch's full (reduced) parameter tree: per-leaf path vs packed path."""
@@ -156,6 +255,7 @@ def run(archs=ARCHS, *, iters: int = 3):
                         "kernel_launches_per_step_leaf": 0,
                         "kernel_launches_per_step_packed": 0})
     _print_arch(QUAD_ARCH, us_q, f" | scan chunk {QUAD_ITERS}")
+    rows += bench_megakernel()
     for arch in archs:
         us = bench_arch(arch, iters=iters)
         leaves, n_leaf, n_packed = kernel_launch_counts(arch)

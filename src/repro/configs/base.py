@@ -212,6 +212,15 @@ class FedRoundSpec:
     # for every other solver (rejected loudly, like the whole-batch
     # combinations below)
     eta_l_schedule: str = ""
+    # beyond-paper perf: fuse the whole K-step local loop into ONE Pallas
+    # kernel per dtype group per round
+    # (kernels/scaffold_update/megakernel.py, DESIGN.md §15). Like
+    # use_fused_update this is a kernel-routing hint, never a semantics
+    # change: combinations the kernel can't express (non-quadratic grads,
+    # the adam solver, whole-batch algorithms, FedProx) fall back to the
+    # per-step path and surface a ``megakernel_fallback_reason`` in round
+    # metrics, mirroring ``scan_fallback_reason``.
+    use_megakernel: bool = False
 
     def __post_init__(self, compress_uplink):
         # lazy import: the registries live above configs in the layering

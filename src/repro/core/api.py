@@ -157,10 +157,15 @@ class Algorithm:
 
 
 class FedAvg(Algorithm):
+    """Plain federated averaging (McMahan et al. 2017) — no correction."""
+
     name = "fedavg"
 
 
 class FedProx(Algorithm):
+    """FedAvg + a proximal term pulling local steps toward the server
+    model (``spec.fedprox_mu``)."""
+
     name = "fedprox"
 
     def prox_mu(self, spec) -> float:
@@ -168,6 +173,9 @@ class FedProx(Algorithm):
 
 
 class Scaffold(Algorithm):
+    """The paper's Algorithm 1: control-variate-corrected local steps,
+    c_i updated by option I or II (``spec.scaffold_option``)."""
+
     name = "scaffold"
     stateful_clients = True
 
@@ -198,6 +206,9 @@ class Scaffold(Algorithm):
 
 
 class LargeBatchSGD(Algorithm):
+    """The large-batch baseline: one server step on the whole round
+    batch, no local work (Table-comparison anchor in the paper)."""
+
     name = "sgd"
     whole_batch = True
 
@@ -229,6 +240,7 @@ def register_algorithm(algo: Algorithm) -> Algorithm:
 
 
 def get_algorithm(name: str) -> Algorithm:
+    """Look up a registered algorithm; unknown names fail loudly."""
     try:
         return _ALGORITHMS[name]
     except KeyError:
@@ -238,6 +250,7 @@ def get_algorithm(name: str) -> Algorithm:
 
 
 def algorithm_names() -> Tuple[str, ...]:
+    """Sorted names of all registered algorithms."""
     return tuple(sorted(_ALGORITHMS))
 
 
@@ -349,12 +362,14 @@ _SERVER_OPTIMIZERS: Dict[str, ServerOptimizer] = {}
 
 
 def register_server_optimizer(opt: ServerOptimizer) -> ServerOptimizer:
+    """Register a ``ServerOptimizer`` instance under its ``name``."""
     assert opt.name, "ServerOptimizer subclasses must set a name"
     _SERVER_OPTIMIZERS[opt.name] = opt
     return opt
 
 
 def get_server_optimizer(name: str) -> ServerOptimizer:
+    """Look up a registered server optimizer; unknown names fail loudly."""
     try:
         return _SERVER_OPTIMIZERS[name]
     except KeyError:
@@ -365,6 +380,7 @@ def get_server_optimizer(name: str) -> ServerOptimizer:
 
 
 def server_optimizer_names() -> Tuple[str, ...]:
+    """Sorted names of all registered server optimizers."""
     return tuple(sorted(_SERVER_OPTIMIZERS))
 
 

@@ -138,11 +138,13 @@ _STALENESS: Dict[str, Callable[..., StalenessWeighting]] = {}
 
 def register_staleness_weighting(
         name: str, factory: Callable[..., StalenessWeighting]) -> None:
+    """Register a staleness-weighting *factory* under ``name``."""
     assert name, "staleness weightings must be registered under a name"
     _STALENESS[name] = factory
 
 
 def make_staleness_weighting(name: str, **kwargs) -> StalenessWeighting:
+    """Build a registered staleness weighting; unknown names fail loudly."""
     try:
         factory = _STALENESS[name]
     except KeyError:
@@ -153,6 +155,7 @@ def make_staleness_weighting(name: str, **kwargs) -> StalenessWeighting:
 
 
 def staleness_weighting_names() -> Tuple[str, ...]:
+    """Sorted names of all registered staleness weightings."""
     return tuple(sorted(_STALENESS))
 
 
@@ -477,6 +480,8 @@ class AsyncBufferedEngine:
         self._dispatched_since = 0
         self._occ_sum = self._occ_n = 0
         self._last_agg_clock = self.sim.clock
+        if tr.megakernel_fallback_reason is not None:
+            out["megakernel_fallback_reason"] = tr.megakernel_fallback_reason
         tr.history.append(out)
         return out
 

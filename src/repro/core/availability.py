@@ -297,6 +297,7 @@ def register_availability(name: str,
 
 
 def make_availability(name: str, **kwargs) -> AvailabilityModel:
+    """Build a registered availability model; unknown names fail loudly."""
     try:
         factory = _AVAILABILITY[name]
     except KeyError:
@@ -307,6 +308,7 @@ def make_availability(name: str, **kwargs) -> AvailabilityModel:
 
 
 def availability_names() -> Tuple[str, ...]:
+    """Sorted names of all registered availability models."""
     return tuple(sorted(_AVAILABILITY))
 
 

@@ -298,6 +298,7 @@ def register_compressor(codec: Compressor) -> Compressor:
 
 
 def get_compressor(name: str) -> Compressor:
+    """Look up a registered codec; unknown names fail loudly."""
     try:
         return _COMPRESSORS[name]
     except KeyError:
@@ -307,6 +308,7 @@ def get_compressor(name: str) -> Compressor:
 
 
 def compressor_names() -> Tuple[str, ...]:
+    """Sorted names of all registered codecs."""
     return tuple(sorted(_COMPRESSORS))
 
 
@@ -326,6 +328,7 @@ def resolve_compressor(spec) -> str:
 
 
 def resolve_downlink(spec) -> str:
+    """The spec's downlink codec name ("none" when unset)."""
     return getattr(spec, "compress_downlink", "none") or "none"
 
 
@@ -373,6 +376,7 @@ def quantize_int8(tree) -> Tuple[Any, Any]:
 
 
 def dequantize_int8(q_tree, scales, dtype=jnp.float32):
+    """Inverse of the int8 quantization: ``q * scale`` cast to dtype."""
     return jax.tree.map(
         lambda q, s: (q.astype(jnp.float32) * s).astype(dtype), q_tree, scales
     )

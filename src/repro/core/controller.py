@@ -71,7 +71,11 @@ from repro.core.compression import (
     resolve_downlink,
     round_comm_bytes,
 )
-from repro.core.local_solver import get_local_solver, resolve_local_solver
+from repro.core.local_solver import (
+    get_local_solver,
+    megakernel_incompatibility,
+    resolve_local_solver,
+)
 from repro.core.rounds import run_round
 from repro.core.sampling import (
     ClientSampler,
@@ -91,7 +95,14 @@ from repro.core.tree import tree_cast
 
 
 def make_grad_fn(loss_fn: Callable) -> Callable:
-    """loss_fn(params, batch) -> (scalar, metrics)  =>  grad_fn -> (grads, metrics)."""
+    """``loss_fn(params, batch) -> (scalar, metrics)``  =>
+    ``grad_fn(params, batch) -> (grads, metrics)``.
+
+    Propagates the loss's ``megakernel_grad`` marker (losses whose
+    gradient is expressible inside the K-step megakernel advertise it —
+    ``data.quadratics.quadratic_loss``) so
+    ``local_solver.megakernel_incompatibility`` can gate on the grad fn
+    it actually receives."""
 
     def grad_fn(params, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -99,6 +110,7 @@ def make_grad_fn(loss_fn: Callable) -> Callable:
         )
         return grads, metrics
 
+    grad_fn.megakernel_grad = getattr(loss_fn, "megakernel_grad", None)
     return grad_fn
 
 
@@ -247,6 +259,26 @@ class FederatedTrainer:
         # these (core/async_engine.py — DESIGN.md §14)
         self._grad_fn = grad_fn
         self._use_fused_update = use_fused_update
+        # megakernel capability gate (DESIGN.md §15): decided once at
+        # trainer init from static config — "" when every local loop will
+        # take the fused K-step kernel, a reason string when they fall
+        # back to the per-step path, None when the spec never asked.
+        # Surfaced per round as metrics["megakernel_fallback_reason"],
+        # mirroring scan_fallback_reason.
+        self.megakernel_fallback_reason: Optional[str] = None
+        if getattr(spec, "use_megakernel", False):
+            if self.algorithm.whole_batch:
+                self.megakernel_fallback_reason = (
+                    f"whole-batch {spec.algorithm!r} runs no local steps")
+            else:
+                self.megakernel_fallback_reason = megakernel_incompatibility(
+                    grad_fn, self.local_solver,
+                    prox_mu=self.algorithm.prox_mu(spec),
+                    params=self.server.x) or ""
+            if self.megakernel_fallback_reason:
+                warnings.warn(
+                    f"use_megakernel requested but running the per-step "
+                    f"path: {self.megakernel_fallback_reason}", stacklevel=2)
 
         def round_fn(server, clients, batches, comp_key):
             return run_round(grad_fn, spec, server, clients, batches,
@@ -721,6 +753,9 @@ class FederatedTrainer:
             self.round_idx += 1
             m = {k: float(v[r]) for k, v in stacked.items()}
             m.update(self._comm_bytes)  # exact ints over the fp32 metrics
+            if self.megakernel_fallback_reason is not None:
+                m["megakernel_fallback_reason"] = (
+                    self.megakernel_fallback_reason)
             m["round"] = self.round_idx
             self.history.append(m)
             out.append(m)
@@ -766,6 +801,8 @@ class FederatedTrainer:
         self.round_idx += 1
         out = {k: float(v) for k, v in metrics.items()}
         out.update(self._comm_bytes)  # exact ints over the fp32 metrics
+        if self.megakernel_fallback_reason is not None:
+            out["megakernel_fallback_reason"] = self.megakernel_fallback_reason
         out["round"] = self.round_idx
         self.history.append(out)
         return out

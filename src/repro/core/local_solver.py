@@ -85,6 +85,10 @@ class LocalSolver:
 
     name: str = ""
     stateful: bool = False
+    #: the solver step is expressible inside the K-step Pallas megakernel
+    #: (kernels/scaffold_update/megakernel.py) — see
+    #: :func:`megakernel_incompatibility` for the full dispatch gate
+    megakernel: bool = False
 
     def init(self, spec, x) -> Any:
         """Fresh slots for a client holding model ``x`` (zeros for a
@@ -131,6 +135,7 @@ class SGDSolver(LocalSolver):
     preserved bit-for-bit including the fused-kernel routing."""
 
     name = "sgd"
+    megakernel = True
 
     def step(self, spec, slots, y, grads, correction, t_local, *,
              use_fused_update: bool = False):
@@ -165,6 +170,7 @@ class MomentumSolver(LocalSolver):
 
     name = "momentum"
     stateful = True
+    megakernel = True  # fused heavy-ball slot pinned in VMEM
 
     def init(self, spec, x):
         return {"m": jax.tree.map(
@@ -260,6 +266,10 @@ class ScheduledSGDSolver(LocalSolver):
     ``use_fused_update`` takes the jnp path."""
 
     name = "sgd_sched"
+    # the megakernel streams the (K,) eta table as a scalar-prefetch
+    # operand, so (unlike the per-step fused kernels) the traced eta is
+    # no obstacle there
+    megakernel = True
 
     def init(self, spec, x):
         from repro.optim.schedules import local_eta_table
@@ -302,6 +312,7 @@ def register_local_solver(solver: LocalSolver) -> LocalSolver:
 
 
 def get_local_solver(name: str) -> LocalSolver:
+    """Look up a registered local solver; unknown names fail loudly."""
     try:
         return _LOCAL_SOLVERS[name]
     except KeyError:
@@ -312,6 +323,7 @@ def get_local_solver(name: str) -> LocalSolver:
 
 
 def local_solver_names() -> Tuple[str, ...]:
+    """Sorted names of all registered local solvers."""
     return tuple(sorted(_LOCAL_SOLVERS))
 
 
@@ -329,6 +341,62 @@ def resolve_local_solver(spec) -> str:
 # ---------------------------------------------------------------------------
 # the K-step local loop
 # ---------------------------------------------------------------------------
+
+
+def megakernel_incompatibility(grad_fn, solver: LocalSolver, *,
+                               prox_mu: float = 0.0, params=None,
+                               batches=None):
+    """Why this (grad_fn, solver, problem) combination can NOT take the
+    K-step megakernel path — None when it can (DESIGN.md §15).
+
+    The megakernel computes the gradient *in-kernel*, so the loss must
+    advertise a kernel-expressible grad via a ``megakernel_grad`` marker
+    (``"quadratic"`` — attached to ``data.quadratics.quadratic_loss`` and
+    propagated by ``core.controller.make_grad_fn``), and the solver step
+    must be expressible too (``solver.megakernel``; ``adam``'s
+    per-element rsqrt state is not fused — yet). The returned string is
+    what engines surface as ``megakernel_fallback_reason`` in round
+    metrics, mirroring ``scan_fallback_reason``.
+    """
+    marker = getattr(grad_fn, "megakernel_grad", None)
+    if marker != "quadratic":
+        return ("grad not kernel-expressible (loss_fn lacks "
+                "megakernel_grad='quadratic')")
+    if not getattr(solver, "megakernel", False):
+        return f"local solver {solver.name!r} has no megakernel variant"
+    if prox_mu:
+        return "FedProx prox term is not expressible in the megakernel"
+    if params is not None:
+        leaves = jax.tree.leaves(params)
+        if len(leaves) != 1 or leaves[0].ndim != 1:
+            return "params are not a single 1-D leaf"
+    if batches is not None and not (
+            isinstance(batches, dict) and "A" in batches and "b" in batches):
+        return "batches are not quadratic (A, b) pairs"
+    return None
+
+
+def _run_megakernel_steps(spec, y0, batches, *, solver: LocalSolver, slots,
+                          correction, shard_fn, k_steps: int):
+    """The megakernel fast path of :func:`run_local_steps`: one
+    ``pallas_call`` for all K steps (DESIGN.md §15). Callers must have
+    cleared :func:`megakernel_incompatibility` first."""
+    from repro.kernels.scaffold_update import megakernel as mk
+
+    if solver.name == "sgd_sched":
+        eta_table = slots["eta"]
+    else:
+        eta_table = jnp.full((k_steps,), spec.eta_l, jnp.float32)
+    is_momentum = solver.name == "momentum"
+    y_K, m_K, losses = mk.scaffold_local_loop(
+        y0, correction, batches, eta_table,
+        m=slots["m"] if is_momentum else None,
+        beta=spec.local_momentum if is_momentum else 0.0)
+    slots_K = {"m": m_K} if is_momentum else slots
+    if shard_fn is not None:
+        y_K = shard_fn(y_K)
+        slots_K = solver.shard_slots(shard_fn, slots_K)
+    return y_K, slots_K, jnp.mean(losses)
 
 
 def run_local_steps(
@@ -370,7 +438,15 @@ def run_local_steps(
         solver = get_local_solver(resolve_local_solver(spec))
     if slots is None:
         slots = solver.init(spec, y0)
-    solver.check_steps(spec, slots, jax.tree.leaves(batches)[0].shape[0])
+    k_steps = jax.tree.leaves(batches)[0].shape[0]
+    solver.check_steps(spec, slots, k_steps)
+
+    if getattr(spec, "use_megakernel", False) and megakernel_incompatibility(
+            grad_fn, solver, prox_mu=prox_mu, params=y0,
+            batches=batches) is None:
+        return _run_megakernel_steps(
+            spec, y0, batches, solver=solver, slots=slots,
+            correction=correction, shard_fn=shard_fn, k_steps=k_steps)
 
     def step(carry, batch):
         y, sl, t = carry

@@ -23,6 +23,11 @@ through the packed Pallas path (one kernel launch per dtype group per
 step — DESIGN.md §8). It matches its fp32-accumulating oracle
 (``ref.scaffold_update_ref``) exactly; for sub-fp32 param dtypes that
 accumulation differs by rounding from the native-dtype jnp expression.
+``spec.use_megakernel`` goes further where the grad/solver combination
+allows it: ``run_local_steps`` fuses the *whole* K-step local loop into
+one ``pallas_call`` per dtype group per round (DESIGN.md §15);
+inexpressible combinations fall back per-step with the reason surfaced
+as ``megakernel_fallback_reason`` in the engines' round metrics.
 
 Two execution strategies with identical algorithm semantics (tested):
   client_parallel   vmap over the S clients (client axis shards over the

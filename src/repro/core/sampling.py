@@ -30,6 +30,9 @@ import numpy as np
 
 
 class ClientSampler:
+    """Host-side uniform without-replacement cohort sampler (its numpy
+    RNG state checkpoints with the trainer)."""
+
     def __init__(self, num_clients: int, num_sampled: int, seed: int = 0):
         self.num_clients = num_clients
         self.num_sampled = num_sampled
@@ -71,6 +74,7 @@ def key_state(key) -> Dict[str, Any]:
 
 
 def key_from_state(state: Dict[str, Any]):
+    """Rebuild a jax PRNG key from ``key_state``'s checkpoint dict."""
     return jax.random.wrap_key_data(
         np.asarray(state["key_data"], np.uint32), impl=state["impl"])
 

@@ -179,6 +179,7 @@ def _ensure_builtin_backends() -> None:
 
 
 def make_store_backend(name: str, **kwargs) -> StoreBackend:
+    """Build a registered store backend; unknown names fail loudly."""
     _ensure_builtin_backends()
     try:
         factory = _STORE_BACKENDS[name]
@@ -190,6 +191,7 @@ def make_store_backend(name: str, **kwargs) -> StoreBackend:
 
 
 def store_backend_names() -> Tuple[str, ...]:
+    """Sorted names of all registered store backends."""
     _ensure_builtin_backends()
     return tuple(sorted(_STORE_BACKENDS))
 

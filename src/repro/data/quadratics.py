@@ -31,6 +31,13 @@ def quadratic_loss(params, batch) -> Tuple[jnp.ndarray, Dict]:
     return loss, {"loss": loss}
 
 
+# the batch-mean gradient sym(mean A) x + mean b is expressible inside the
+# K-step Pallas megakernel; core.controller.make_grad_fn propagates this
+# marker to the grad fn and local_solver.megakernel_incompatibility gates
+# the fused dispatch on it (DESIGN.md §15)
+quadratic_loss.megakernel_grad = "quadratic"
+
+
 def global_optimum(A_list, b_list):
     A = np.mean(A_list, axis=0)
     b = np.mean(b_list, axis=0)

@@ -59,6 +59,7 @@ def set_force_interpret(value: bool) -> None:
 
 @contextlib.contextmanager
 def force_interpret():
+    """Context manager: interpret-mode kernels for the enclosed traces."""
     prev = _FORCE_INTERPRET
     set_force_interpret(True)
     try:
@@ -247,3 +248,29 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
         return n
 
     return walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """*Dynamic* ``pallas_call`` launch count of one ``fn(*args)`` call:
+    like :func:`count_pallas_calls` but multiplies ``lax.scan`` bodies by
+    their trip count, so a K-step per-step loop reports K launches while
+    the grid=(K,) megakernel reports 1 (DESIGN.md §15). While-loop bodies
+    have no static trip count and are counted once."""
+
+    def walk(jaxpr, mult: int) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += mult
+            sub_mult = mult
+            if eqn.primitive.name == "scan":
+                sub_mult = mult * int(eqn.params.get("length", 1))
+            for v in eqn.params.values():
+                for item in (v if isinstance(v, (list, tuple)) else [v]):
+                    if hasattr(item, "jaxpr"):
+                        n += walk(item.jaxpr, sub_mult)
+                    elif hasattr(item, "eqns"):
+                        n += walk(item, sub_mult)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr, 1)

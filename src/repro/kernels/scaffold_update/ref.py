@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 
 def scaffold_update_ref(y, g, corr, eta: float):
+    """fp32-accumulating oracle of the fused corrected step (eq. 3)."""
     out = y.astype(jnp.float32) - eta * (
         g.astype(jnp.float32) + corr.astype(jnp.float32)
     )
@@ -40,3 +41,50 @@ def scaffold_momentum_update_tree_ref(y, g, corr, m, eta: float, beta: float):
     is2 = lambda t: isinstance(t, tuple) and len(t) == 2  # noqa: E731
     return (jax.tree.map(lambda t: t[0], out, is_leaf=is2),
             jax.tree.map(lambda t: t[1], out, is_leaf=is2))
+
+
+def scaffold_local_loop_ref(y, corr, eta_table, A, b, *, m=None,
+                            beta: float = 0.0):
+    """K-step corrected local loop on the quadratics substrate — the
+    megakernel's oracle and its off-TPU fast path.
+
+    ``y``: ``(d,)``; ``corr``: ``(d,)`` or None; ``eta_table``: ``(K,)``;
+    ``A``: ``(K, bsz, d, d)``; ``b``: ``(K, bsz, d)``; ``m``: ``(d,)``
+    heavy-ball slot or None. Returns ``(y_K, m_K | None, losses (K,))``.
+
+    Mirrors the kernel's per-step fp32 arithmetic (``y`` rounded to its
+    own dtype once per step) but is tuned as a CPU fast path, not just an
+    oracle: the batch means are hoisted out of the loop, the symmetric
+    gradient ``sym(mean A) y`` is taken as ``0.5*(A y + y A)`` — two
+    matvecs instead of materialising K symmetrized (d, d) operators —
+    the loss reuses the ``A y`` matvec, and the short K-step scan is
+    fully unrolled (it is launch overhead, not math, that dominates at
+    small d — the same bottleneck the megakernel removes on TPU).
+    """
+    d = y.shape[0]
+    corr32 = (jnp.zeros((d,), jnp.float32) if corr is None
+              else corr.astype(jnp.float32))
+    Am = jnp.mean(A.astype(jnp.float32), axis=1)
+    bm = jnp.mean(b.astype(jnp.float32), axis=1)
+    has_m = m is not None
+    m0 = m.astype(jnp.float32) if has_m else jnp.zeros((d,), jnp.float32)
+
+    def step(carry, inputs):
+        yy, mm = carry
+        Ak, bk, eta = inputs
+        y32 = yy.astype(jnp.float32)
+        u = Ak @ y32
+        v = y32 @ Ak
+        loss = 0.5 * jnp.dot(u, y32) + jnp.dot(bk, y32)
+        g = 0.5 * (u + v) + bk + corr32
+        if has_m:
+            mm = beta * mm + g
+            g = mm
+        y_new = (y32 - eta * g).astype(yy.dtype)
+        return (y_new, mm), loss
+
+    K = A.shape[0]
+    (y_K, m_K), losses = jax.lax.scan(
+        step, (y, m0), (Am, bm, jnp.asarray(eta_table, jnp.float32)),
+        unroll=K if K <= 32 else 8)
+    return y_K, (m_K if has_m else None), losses

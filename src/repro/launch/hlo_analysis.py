@@ -8,12 +8,21 @@ each while body by its known trip count (XLA annotates
 ``backend_config={"known_trip_count":{"n":...}}``).
 
 Costs modelled per computation (memoised, recursive):
-  flops        dot ops: 2 × |output| × |contraction|, × trip counts
-  bytes        HBM traffic: Σ over top-level ops of operand+output bytes
-               (fusions counted at the call boundary — internals stay in
-               registers/VMEM, matching how a fused TPU kernel behaves)
-  collectives  output bytes per op kind (all-reduce/all-gather/…),
-               × trip counts
+  flops            dot ops: 2 × |output| × |contraction|, × trip counts
+  bytes            HBM traffic: Σ over top-level ops of operand+output
+                   bytes (fusions counted at the call boundary —
+                   internals stay in registers/VMEM, matching how a
+                   fused TPU kernel behaves)
+  collectives      output bytes per op kind (all-reduce/all-gather/…),
+                   × trip counts
+  kernel_launches  hand-written kernel dispatches: custom-calls with a
+                   Pallas/Mosaic target, × trip counts — the structural
+                   counterpart of ``ops.count_pallas_launches``. This is
+                   what makes the megakernel's K·(dtype groups) →
+                   (dtype groups) per-round reduction visible in lowered
+                   HLO (DESIGN.md §15): the per-step fused path's launch
+                   sits inside the K-trip local-step while loop, the
+                   megakernel's outside it.
 
 All numbers are per-device (the SPMD-partitioned module is the per-device
 program).
@@ -35,6 +44,11 @@ _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALL_ATTR = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CUSTOM_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+# custom-call targets that are hand-written kernel dispatches (Pallas
+# lowers to Mosaic on TPU, Triton on GPU)
+KERNEL_CALL_TARGETS = ("tpu_custom_call", "mosaic", "triton", "pallas")
 
 COLLECTIVE_KINDS = (
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -81,10 +95,12 @@ class Cost:
     bytes: float = 0.0
     collectives: Dict[str, float] = field(default_factory=dict)
     bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    kernel_launches: float = 0.0
 
     def add(self, other: "Cost", mult: float = 1.0):
         self.flops += other.flops * mult
         self.bytes += other.bytes * mult
+        self.kernel_launches += other.kernel_launches * mult
         for k, v in other.collectives.items():
             self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
         for k, v in other.bytes_by_kind.items():
@@ -275,6 +291,11 @@ class HloCostModel:
                 continue
             if op.kind == "dot":
                 total.flops += self._dot_flops(op, table)
+            if op.kind == "custom-call":
+                tm = _CUSTOM_TARGET_RE.search(op.line)
+                target = tm.group(1).lower() if tm else ""
+                if any(k in target for k in KERNEL_CALL_TARGETS):
+                    total.kernel_launches += 1.0
             total._tally(op.kind, self._op_bytes(op, table))
         self._memo[cname] = total
         return total
@@ -291,6 +312,7 @@ def analyze_hlo(text: str) -> Dict:
         "bytes": c.bytes,
         "collectives": {k: v for k, v in c.collectives.items()},
         "collective_bytes": c.collective_bytes,
+        "kernel_launches": c.kernel_launches,
         "bytes_by_kind": dict(sorted(c.bytes_by_kind.items(),
                                      key=lambda kv: -kv[1])[:12]),
     }

@@ -81,6 +81,13 @@ def main(argv=None):
                     choices=[""] + list(schedule_names()),
                     help="per-local-step eta_l schedule (sgd_sched solver "
                          "only)")
+    ap.add_argument("--use-megakernel", action="store_true",
+                    help="fuse the whole K-step local loop into one Pallas "
+                         "kernel per dtype group per round where the "
+                         "grad/solver combination supports it; unsupported "
+                         "combos fall back per-step with a "
+                         "megakernel_fallback_reason in round metrics "
+                         "(DESIGN.md §15)")
     ap.add_argument("--list-registries", action="store_true",
                     help="print the seven strategy registries (algorithms, "
                          "server optimizers, compressors, local solvers, "
@@ -190,6 +197,7 @@ def main(argv=None):
         local_momentum=args.local_momentum,
         local_beta2=args.local_beta2,
         eta_l_schedule=args.eta_l_schedule,
+        use_megakernel=args.use_megakernel,
         weighted_aggregation=args.weighted,
         compress=args.compress,
         compress_k=args.compress_k,
@@ -236,6 +244,10 @@ def main(argv=None):
     if trainer.scan_active:
         print(f"scanned engine: on-device chunks of <= {args.scan_rounds} "
               f"rounds")
+    if args.use_megakernel:
+        reason = trainer.megakernel_fallback_reason
+        print("megakernel: fused K-step local loop" if reason == ""
+              else f"megakernel: per-step fallback ({reason})")
     if args.store == "tiered":
         print(f"tiered store: population host-side "
               f"({args.store_backend or 'dense'} backend), device peak "

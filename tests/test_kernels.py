@@ -133,6 +133,227 @@ def test_fedprox_prox_term_fp32_agreement():
     np.testing.assert_array_equal(outs[True], oracle)
 
 
+# ---------------------------------------------------------------------------
+# the K-step megakernel (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.scaffold_update.megakernel import scaffold_local_loop  # noqa: E402
+from repro.kernels.scaffold_update.ref import scaffold_local_loop_ref  # noqa: E402
+
+MEGA_SOLVERS = ("sgd", "momentum", "sgd_sched")
+
+
+def _quad_case(d, K, bsz, dtype, seed=0):
+    """A random quadratics local-round problem (params scaled so K steps
+    at eta~0.05 stay well away from bf16 overflow)."""
+    ks = jax.random.split(jax.random.key(seed), 5)
+    y = (0.5 * jax.random.normal(ks[0], (d,))).astype(dtype)
+    corr = (0.1 * jax.random.normal(ks[1], (d,))).astype(dtype)
+    A = (0.3 * jax.random.normal(ks[2], (K, bsz, d, d))).astype(dtype)
+    b = (0.3 * jax.random.normal(ks[3], (K, bsz, d))).astype(dtype)
+    m = 0.1 * jax.random.normal(ks[4], (d,), jnp.float32)
+    return y, corr, A, b, m
+
+
+def _eta_table(solver, K):
+    if solver == "sgd_sched":  # a genuinely per-step-varying table
+        return jnp.linspace(0.08, 0.01, K, dtype=jnp.float32)
+    return jnp.full((K,), 0.05, jnp.float32)
+
+
+@pytest.mark.parametrize("solver", MEGA_SOLVERS)
+@pytest.mark.parametrize("dtype", DTYPES)
+# d=100 exercises the lane-only padding (not a multiple of 128); d=130
+# exercises rows > 1
+@pytest.mark.parametrize("d", [100, 130])
+def test_megakernel_matches_ref(solver, dtype, d):
+    """The fused K-step kernel (interpret mode = actual kernel body)
+    reproduces the lax.scan oracle's trajectory and per-step losses."""
+    K, bsz = 6, 2
+    y, corr, A, b, m0 = _quad_case(d, K, bsz, dtype, seed=d)
+    eta = _eta_table(solver, K)
+    use_m = solver == "momentum"
+    y_k, m_k, loss_k = scaffold_local_loop(
+        {"x": y}, {"x": corr}, {"A": A, "b": b}, eta,
+        m={"x": m0} if use_m else None, beta=0.9 if use_m else 0.0,
+        interpret=True)
+    y_r, m_r, loss_r = scaffold_local_loop_ref(
+        y, corr, eta, A, b, m=m0 if use_m else None,
+        beta=0.9 if use_m else 0.0)
+    assert y_k["x"].shape == (d,) and y_k["x"].dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    err = jnp.max(jnp.abs(y_k["x"].astype(jnp.float32)
+                          - y_r.astype(jnp.float32)))
+    assert float(err) < tol
+    np.testing.assert_allclose(np.asarray(loss_k), np.asarray(loss_r),
+                               rtol=1e-4 if dtype == jnp.float32 else 3e-2)
+    if use_m:
+        assert m_k["x"].dtype == jnp.float32
+        err_m = jnp.max(jnp.abs(m_k["x"] - m_r))
+        assert float(err_m) < tol
+
+
+def test_megakernel_k1_degenerate():
+    """K=1 collapses to exactly one corrected step."""
+    d = 100
+    y, corr, A, b, _ = _quad_case(d, 1, 3, jnp.float32, seed=1)
+    eta = jnp.full((1,), 0.05, jnp.float32)
+    y_k, _, losses = scaffold_local_loop(
+        {"x": y}, {"x": corr}, {"A": A, "b": b}, eta, interpret=True)
+    Am = jnp.mean(A[0], axis=0)
+    Am = 0.5 * (Am + Am.T)
+    bm = jnp.mean(b[0], axis=0)
+    g = Am @ y + bm + corr
+    np.testing.assert_allclose(np.asarray(y_k["x"]),
+                               np.asarray(y - 0.05 * g), atol=1e-5)
+    assert losses.shape == (1,)
+
+
+@pytest.mark.parametrize("solver", MEGA_SOLVERS)
+def test_megakernel_run_local_steps_equivalence(solver):
+    """run_local_steps with spec.use_megakernel dispatches into the fused
+    loop and matches the per-step (jnp and fused-kernel) trajectories."""
+    import dataclasses
+
+    from repro.configs.base import FedRoundSpec
+    from repro.core.controller import make_grad_fn
+    from repro.core.local_solver import run_local_steps
+    from repro.data import quadratic_loss
+    from repro.kernels.scaffold_update.ops import force_interpret
+
+    d, K = 100, 5
+    y, corr, A, b, _ = _quad_case(d, K, 2, jnp.float32, seed=2)
+    y0 = {"x": y}
+    batches = {"A": A, "b": b}
+    grad_fn = make_grad_fn(quadratic_loss)
+    assert grad_fn.megakernel_grad == "quadratic"
+    spec = FedRoundSpec(
+        algorithm="scaffold", num_clients=4, num_sampled=2, local_steps=K,
+        local_batch=2, eta_l=0.05, local_solver=solver, local_momentum=0.9,
+        eta_l_schedule="cosine" if solver == "sgd_sched" else "")
+    out = {}
+    for mega in (False, True):
+        sp = dataclasses.replace(spec, use_megakernel=mega)
+        # interpret mode: the mega variant runs the actual kernel body
+        with force_interpret():
+            y_K, _, loss = run_local_steps(
+                grad_fn, sp, y0, batches, correction={"x": corr},
+                use_fused_update=True)
+        out[mega] = (np.asarray(y_K["x"]), float(loss))
+    np.testing.assert_allclose(out[True][0], out[False][0], atol=1e-5)
+    np.testing.assert_allclose(out[True][1], out[False][1], rtol=1e-5)
+
+
+def test_megakernel_launch_count_collapse():
+    """The whole point: K pallas launches per round -> 1 (per dtype
+    group), counted through scan trip counts via jaxpr inspection."""
+    import dataclasses
+
+    from repro.configs.base import FedRoundSpec
+    from repro.core.controller import make_grad_fn
+    from repro.core.local_solver import run_local_steps
+    from repro.data import quadratic_loss
+    from repro.kernels.scaffold_update.ops import (
+        count_pallas_launches,
+        force_interpret,
+    )
+
+    d, K = 64, 7
+    grad_fn = make_grad_fn(quadratic_loss)
+    y0 = {"x": jnp.ones((d,), jnp.float32)}
+    corr = {"x": jnp.zeros((d,), jnp.float32)}
+    batches = {"A": jnp.ones((K, 1, d, d), jnp.float32),
+               "b": jnp.ones((K, 1, d), jnp.float32)}
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=4, num_sampled=2,
+                        local_steps=K, local_batch=1, eta_l=0.05)
+    counts = {}
+    with force_interpret():
+        for mega in (False, True):
+            sp = dataclasses.replace(spec, use_megakernel=mega)
+            counts[mega] = count_pallas_launches(
+                lambda y, bt, c, sp=sp: run_local_steps(
+                    grad_fn, sp, y, bt, correction=c,
+                    use_fused_update=True)[0],
+                y0, batches, corr)
+    assert counts[False] == K
+    assert counts[True] == 1
+
+
+def test_megakernel_incompatibility_gate():
+    """The capability dispatch rejects exactly the inexpressible combos,
+    with the reason strings engines surface in round metrics."""
+    from repro.core.controller import make_grad_fn
+    from repro.core.local_solver import (
+        get_local_solver,
+        megakernel_incompatibility,
+    )
+    from repro.data import quadratic_loss
+
+    grad_fn = make_grad_fn(quadratic_loss)
+    ok = lambda **kw: megakernel_incompatibility(  # noqa: E731
+        grad_fn, get_local_solver("sgd"), **kw)
+    assert ok() is None
+    d = 8
+    good_batches = {"A": jnp.ones((2, 1, d, d)), "b": jnp.ones((2, 1, d))}
+    assert ok(params={"x": jnp.ones((d,))}, batches=good_batches) is None
+    # adam has no fused variant
+    reason = megakernel_incompatibility(grad_fn, get_local_solver("adam"))
+    assert "adam" in reason
+    # a grad fn without the marker is not kernel-expressible
+    plain = make_grad_fn(lambda p, b: (jnp.sum(p["x"] ** 2), {}))
+    assert "megakernel_grad" in megakernel_incompatibility(
+        plain, get_local_solver("sgd"))
+    # FedProx's prox term is not in the kernel
+    assert "prox" in ok(prox_mu=0.5)
+    # multi-leaf / non-1D params
+    assert "single 1-D leaf" in ok(params={"a": jnp.ones((d,)),
+                                           "c": jnp.ones((d,))})
+    assert "single 1-D leaf" in ok(params={"x": jnp.ones((2, d))})
+    # non-quadratic batches
+    assert "quadratic" in ok(batches={"tokens": jnp.ones((2, 1, 4))})
+
+
+def test_scanned_round_megakernel_fallback_metrics():
+    """Trainer-level dispatch: quadratics + sgd runs the megakernel
+    (empty fallback reason in every round's metrics, trajectory matches
+    the per-step trainer); adam falls back loudly with the reason set."""
+    import dataclasses
+
+    from repro.configs.base import FedRoundSpec
+    from repro.core import FederatedTrainer
+    from repro.data import make_similarity_quadratics, quadratic_loss
+
+    ds = make_similarity_quadratics(8, 12, delta=0.3, G=8.0, mu=0.3, seed=0)
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=8, num_sampled=2,
+                        local_steps=3, local_batch=1, eta_l=0.1,
+                        use_megakernel=True)
+    init = lambda key: {"x": jnp.ones((12,), jnp.float32)}  # noqa: E731
+
+    def make(sp, **kw):
+        return FederatedTrainer(quadratic_loss, init, sp, ds, seed=0,
+                                use_fused_update=True, **kw)
+
+    tr = make(spec, scan_rounds=4)
+    assert tr.megakernel_fallback_reason == ""
+    tr.run(4)
+    assert all(m["megakernel_fallback_reason"] == "" for m in tr.history)
+
+    base = make(dataclasses.replace(spec, use_megakernel=False),
+                scan_rounds=4)
+    assert base.megakernel_fallback_reason is None
+    base.run(4)
+    assert "megakernel_fallback_reason" not in base.history[-1]
+    np.testing.assert_allclose(np.asarray(tr.x["x"]),
+                               np.asarray(base.x["x"]), atol=1e-5)
+
+    with pytest.warns(UserWarning, match="megakernel"):
+        tr_adam = make(dataclasses.replace(spec, local_solver="adam"),
+                       scan_rounds=4)
+    assert "adam" in tr_adam.megakernel_fallback_reason
+    tr_adam.run(4)
+    assert "adam" in tr_adam.history[-1]["megakernel_fallback_reason"]
+
+
 SWA_CASES = [
     # (B, S, Hq, Hkv, D, window)
     (2, 256, 4, 2, 64, 128),
