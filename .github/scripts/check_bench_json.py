@@ -98,6 +98,26 @@ def check(path: str) -> None:
             assert record["bytes_down_per_round"] > 0, record
             # can legitimately dip below 1.0 (large --k on tiny leaves)
             assert record["uplink_ratio"] > 0, record
+    if payload["bench"] == "dp":
+        privs = {record["privatizer"] for record in records}
+        assert "none" in privs, privs  # the DP-off baseline row
+        dp_records = [r for r in records if r["privatizer"] != "none"]
+        assert dp_records, "dp bench must carry Gaussian-privatizer rows"
+        for record in records:
+            # acceptance: every DP point rides the scanned engine
+            assert record["mode"] == "scanned", record
+            assert record["rounds_per_s"] > 0, record
+            assert record["dp_overhead"] > 0, record
+        for record in dp_records:
+            assert record["clip_norm"] > 0, record
+            assert record["noise_multiplier"] > 0, record
+            assert 0.0 <= record["clipped_frac_final"] <= 1.0, record
+            eps = record["epsilon_by_round"]
+            # acceptance: the accountant is strictly increasing in rounds
+            assert len(eps) == record["scan_chunk"], record
+            assert all(b > a for a, b in zip(eps, eps[1:])), eps
+            assert record["epsilon_at_R"] == eps[-1] > 0, record
+            assert 0.0 < record["dp_delta"] < 1.0, record
     print(f"{path}: ok ({len(records)} records, bench={payload['bench']!r})")
 
 

@@ -1,0 +1,117 @@
+"""DP sweep on the scanned engine (DESIGN.md §16).
+
+For a noise_multiplier x clip_norm grid over the Gaussian privatizers,
+runs ``FederatedTrainer`` with ``scan_rounds=R`` (asserting the scan is
+active: the clip fixpoint, the seed+3 noise stream and the fp32
+accountant metric all live inside the ``lax.scan``) on the
+dispatch-bound quadratics workload and reports
+
+  rounds/s          wall-clock of the scanned chunk,
+  dp_overhead       rounds/s of the ``none`` baseline / DP rounds/s
+                    (the cost of clipping + noising the cohort),
+  epsilon_by_round  the exact float64 accountant trajectory the run's
+                    history carries (strictly increasing),
+  epsilon_at_R      the final privacy spend at ``dp_delta``.
+
+Emits one ``scaffold-bench/v1`` record per grid point plus the
+``none`` baseline — ``python -m benchmarks.bench_dp`` writes
+``BENCH_dp.json`` (validated by .github/scripts/check_bench_json.py
+and uploaded by the CI bench job; ``--smoke`` is the CI-speed preset).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_argparser, bench_cli
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import make_similarity_quadratics, quadratic_loss
+
+N, S, K, DIM = 20, 4, 10, 20
+
+NOISE_GRID = (0.5, 1.1)
+CLIP_GRID = (0.25, 1.0)
+
+
+def _make_trainer(privatizer: str, *, clip: float, z: float, iters: int,
+                  seed: int = 0, ds=None):
+    spec = FedRoundSpec(algorithm="scaffold", num_clients=N, num_sampled=S,
+                        local_steps=K, local_batch=1, eta_l=0.1,
+                        privatizer=privatizer, clip_norm=clip,
+                        noise_multiplier=z)
+    init = lambda key: {"x": jnp.ones((ds.dim,), jnp.float32)}
+    return FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed,
+                            scan_rounds=iters)
+
+
+def bench_point(privatizer: str, *, clip: float, z: float, iters: int, ds):
+    tr = _make_trainer(privatizer, clip=clip, z=z, iters=iters, ds=ds)
+    assert tr.scan_active, (privatizer, tr.scan_fallback_reason)
+    tr.run(iters)  # compile the R=iters chunk outside timing
+    t0 = time.perf_counter()
+    tr.run(iters)
+    jax.block_until_ready(tr.x)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    m = tr.history[-1]
+    row = {
+        "bench": "dp",
+        "privatizer": privatizer,
+        "clip_norm": clip,
+        "noise_multiplier": z,
+        "mode": "scanned",
+        "scan_chunk": iters,
+        "us_per_round": us,
+        "rounds_per_s": 1e6 / max(us, 1e-9),
+        "final_loss": m["loss"],
+    }
+    if privatizer != "none":
+        # the timed run's history is the second chunk (rounds R..2R) —
+        # the accountant keeps counting across chunks, so the epsilon
+        # trajectory here is rounds R+1..2R of the continuous run
+        eps = [h["dp_epsilon"] for h in tr.history[-iters:]]
+        row["epsilon_by_round"] = eps
+        row["epsilon_at_R"] = eps[-1]
+        row["dp_delta"] = tr.spec.dp_delta
+        row["clipped_frac_final"] = m["dp_clipped_frac"]
+    return row
+
+
+def run(*, iters: int = 64, seed: int = 0):
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=8.0, mu=0.3,
+                                    seed=seed)
+    rows = [bench_point("none", clip=0.0, z=0.0, iters=iters, ds=ds)]
+    for priv in ("server_gauss", "distributed_gauss"):
+        for z in NOISE_GRID:
+            for clip in CLIP_GRID:
+                rows.append(bench_point(priv, clip=clip, z=z, iters=iters,
+                                        ds=ds))
+    base = rows[0]["rounds_per_s"]
+    for r in rows:
+        r["dp_overhead"] = base / max(r["rounds_per_s"], 1e-9)
+        eps = r.get("epsilon_at_R")
+        print(f"dp_{r['privatizer']:17s} C={r['clip_norm']:<4g} "
+              f"z={r['noise_multiplier']:<4g}: "
+              f"{r['us_per_round']/1e3:7.2f} ms/round "
+              f"({r['rounds_per_s']:8.0f} rounds/s, "
+              f"{r['dp_overhead']:.2f}x) | "
+              + (f"eps={eps:8.2f}" if eps is not None else "eps=     inf"))
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, iters: int = 64):
+    del fast  # scale rides on --iters/--smoke (no --full, like bench_round)
+    if smoke:
+        iters = min(iters, 8)
+    return run(iters=iters)
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed preset (clamps the scan chunk to 8)")
+    ap.add_argument("--iters", type=int, default=64,
+                    help="timed rounds (also the scan chunk size)")
+    bench_cli("dp", main, parser=ap, forward=("smoke", "iters"))

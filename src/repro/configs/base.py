@@ -212,6 +212,18 @@ class FedRoundSpec:
     # for every other solver (rejected loudly, like the whole-batch
     # combinations below)
     eta_l_schedule: str = ""
+    # beyond-paper: differential privacy of the aggregated update, a name
+    # in the repro.core.privatizer registry (none | server_gauss |
+    # distributed_gauss — DESIGN.md §16). Gaussian privatizers L2-clip
+    # every client delta to ``clip_norm``, add noise calibrated to
+    # ``clip_norm * noise_multiplier`` (at the server post-aggregation or
+    # distributed across clients pre-aggregation), and surface the
+    # moments-accountant ``dp_epsilon`` at ``dp_delta`` in every round's
+    # metrics. Composition order is clip -> compress -> aggregate.
+    privatizer: str = "none"
+    clip_norm: float = 0.0
+    noise_multiplier: float = 0.0
+    dp_delta: float = 1e-5
     # beyond-paper perf: fuse the whole K-step local loop into ONE Pallas
     # kernel per dtype group per round
     # (kernels/scaffold_update/megakernel.py, DESIGN.md §15). Like
@@ -232,6 +244,7 @@ class FedRoundSpec:
 
         from repro.core.compression import compressor_names
         from repro.core.local_solver import local_solver_names
+        from repro.core.privatizer import get_privatizer, privatizer_names
         from repro.optim.schedules import schedule_names
 
         assert self.algorithm in algorithm_names(), (
@@ -277,6 +290,34 @@ class FedRoundSpec:
                 f"compress_uplink={compress_uplink} contradicts "
                 f"compress={self.compress!r}; set compress "
                 f"('none' disables) instead of the back-compat flag")
+        assert self.privatizer in privatizer_names(), (
+            self.privatizer, privatizer_names())
+        priv = get_privatizer(self.privatizer)
+        if priv.clips:
+            # the Gaussian mechanisms are meaningless without a finite
+            # sensitivity bound and a noise scale — reject silent no-DP
+            assert self.clip_norm > 0.0, (
+                f"privatizer={self.privatizer!r} needs clip_norm > 0 "
+                f"(the L2 sensitivity bound), got {self.clip_norm}")
+            assert self.noise_multiplier > 0.0, (
+                f"privatizer={self.privatizer!r} needs noise_multiplier > 0 "
+                f"(z of the Gaussian mechanism), got "
+                f"{self.noise_multiplier}")
+            assert 0.0 < self.dp_delta < 1.0, (
+                f"dp_delta must lie in (0, 1), got {self.dp_delta}")
+            # the noise std is calibrated for the uniform S-client mean;
+            # a size-weighted mean changes per-client sensitivity and
+            # would silently void the accountant
+            assert not self.weighted_aggregation, (
+                f"privatizer={self.privatizer!r} noise is calibrated for "
+                f"the uniform mean; weighted_aggregation is unsupported")
+        else:
+            assert self.clip_norm == 0.0, (
+                f"clip_norm={self.clip_norm} has no effect for "
+                f"privatizer={self.privatizer!r}")
+            assert self.noise_multiplier == 0.0, (
+                f"noise_multiplier={self.noise_multiplier} has no effect "
+                f"for privatizer={self.privatizer!r}")
         algo = get_algorithm(self.algorithm)
         if (self.server_optimizer == "" and self.server_momentum == 0.0
                 and algo.default_server_optimizer == "momentum"):
@@ -303,6 +344,10 @@ class FedRoundSpec:
             assert self.compress_downlink == "none", (
                 f"compress_downlink has no effect for whole-batch "
                 f"{self.algorithm!r}")
+            # there are no per-client deltas to clip or noise
+            assert self.privatizer == "none", (
+                f"privatizer={self.privatizer!r} has no effect for "
+                f"whole-batch {self.algorithm!r}")
             # no local steps at all: a non-trivial local solver (incl.
             # every stateful one) would silently never run
             assert self.local_solver == "sgd", (

@@ -14,11 +14,12 @@ Entry points:
   FederatedTrainer — host controller (sampling + stateful-client stores;
                      sync / pipelined / scanned / async execution modes)
 
-Extensibility (DESIGN.md §9/§11/§12/§13/§14) — seven registries, each
-listable (``algorithm_names`` / ``server_optimizer_names`` /
+Extensibility (DESIGN.md §9/§11/§12/§13/§14/§16) — eight registries,
+each listable (``algorithm_names`` / ``server_optimizer_names`` /
 ``compressor_names`` / ``local_solver_names`` / ``store_backend_names``
-/ ``availability_names`` / ``staleness_weighting_names``;
-``launch/train.py --list-registries`` prints all seven):
+/ ``availability_names`` / ``staleness_weighting_names`` /
+``privatizer_names``; ``launch/train.py --list-registries`` prints all
+eight):
   Algorithm / register_algorithm            — per-round algorithm strategy
   ServerOptimizer / register_server_optimizer — server step on the
                                               aggregated delta
@@ -43,6 +44,14 @@ listable (``algorithm_names`` / ``server_optimizer_names`` /
   StalenessWeighting / register_staleness_weighting — down-weighting of
                                               stale buffered updates
                                               before the server step
+  Privatizer / register_privatizer          — differential privacy of the
+                                              aggregated update: per-update
+                                              L2 clip, server/distributed
+                                              Gaussian noise, and the
+                                              dp_epsilon accountant in
+                                              round metrics (clip ->
+                                              compress -> aggregate;
+                                              DESIGN.md §16)
 """
 from repro.core.api import (  # noqa: F401
     Algorithm,
@@ -103,6 +112,13 @@ from repro.core.store import (  # noqa: F401
     register_store_backend,
     stale_mask,
     store_backend_names,
+)
+from repro.core.privatizer import (  # noqa: F401
+    Privatizer,
+    get_privatizer,
+    privatizer_names,
+    register_privatizer,
+    resolve_privatizer,
 )
 from repro.core.local_solver import (  # noqa: F401
     LocalSolver,

@@ -419,8 +419,8 @@ def init_server_state(spec, x) -> ServerState:
 
 def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
                data, batch_fn, sample_key, data_key, comp_key=None,
-               start_round=0, sizes=None, use_fused_update: bool = False,
-               shard_fn=None):
+               priv_key=None, start_round=0, sizes=None,
+               use_fused_update: bool = False, shard_fn=None):
     """R communication rounds as one ``lax.scan`` — zero host round trips.
 
     The host loop pays per-round dispatch (numpy cohort sampling, host
@@ -456,12 +456,15 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
     comp_key:     base key of the compression stream; round ``t`` uses
                   ``fold_in(comp_key, t)``. Required only when a
                   configured codec is keyed (``randk_ef``).
+    priv_key:     base key of the privacy stream (``key(seed+3)``);
+                  round ``t`` uses ``fold_in(priv_key, t)``. Required
+                  only when ``spec.privatizer`` adds noise.
     start_round:  absolute index of the first round (int or traced scalar
                   — traced keeps one compilation across resume chunks).
     sizes:        optional ``(N,)`` per-client dataset sizes for
                   ``spec.weighted_aggregation``.
 
-    RNG contract: all three streams are *stateless* functions of (base
+    RNG contract: all four streams are *stateless* functions of (base
     key, absolute round index), so a host loop calling ``run_round`` once
     per round with the same keys — or this scan re-entered at any chunk
     boundary after a checkpoint restore — consumes identical randomness
@@ -514,7 +517,10 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
         out = run_round(grad_fn, spec, server, clients, batches,
                         use_fused_update=use_fused_update, shard_fn=shard_fn,
                         comp_key=(jax.random.fold_in(comp_key, t)
-                                  if comp_key is not None else None))
+                                  if comp_key is not None else None),
+                        priv_key=(jax.random.fold_in(priv_key, t)
+                                  if priv_key is not None else None),
+                        dp_round=t)
         if wrapped:
             new_rows = {"c_i": out.clients.c_i}
             if carry_residuals:
@@ -534,8 +540,9 @@ def run_rounds(grad_fn, spec, server: ServerState, client_store, R: int, *,
 
 def run_rounds_cohort(grad_fn, spec, server: ServerState, cohort_store,
                       R: int, *, data, batch_fn, round_ids, slot_ids,
-                      data_key, comp_key=None, start_round=0, weights=None,
-                      use_fused_update: bool = False, shard_fn=None):
+                      data_key, comp_key=None, priv_key=None, start_round=0,
+                      weights=None, use_fused_update: bool = False,
+                      shard_fn=None):
     """``run_rounds`` over a *cohort-sized* client-store buffer — the
     tiered store's scanned engine (DESIGN.md §13).
 
@@ -599,7 +606,10 @@ def run_rounds_cohort(grad_fn, spec, server: ServerState, cohort_store,
         out = run_round(grad_fn, spec, server, clients, batches,
                         use_fused_update=use_fused_update, shard_fn=shard_fn,
                         comp_key=(jax.random.fold_in(comp_key, t)
-                                  if comp_key is not None else None))
+                                  if comp_key is not None else None),
+                        priv_key=(jax.random.fold_in(priv_key, t)
+                                  if priv_key is not None else None),
+                        dp_round=t)
         if wrapped:
             new_rows = {"c_i": out.clients.c_i}
             if carry_residuals:

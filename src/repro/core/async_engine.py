@@ -69,6 +69,7 @@ from repro.core.compression import (
     round_comm_bytes,
 )
 from repro.core.local_solver import get_local_solver, resolve_local_solver
+from repro.core.privatizer import get_privatizer, resolve_privatizer
 from repro.core.rounds import client_update
 from repro.core.store import TieredClientStore
 from repro.core.tree import tree_cast, tree_mean_leading, tree_norm
@@ -227,6 +228,12 @@ class AsyncBufferedEngine:
         self.up = get_compressor(resolve_compressor(spec))
         self.down = get_compressor(resolve_downlink(spec))
         self.solver = get_local_solver(resolve_local_solver(spec))
+        # DP (DESIGN.md §16): clip/noise ride the dispatch groups exactly
+        # like the sync round's client_parallel block; the privacy stream
+        # folds by *version* (fold_in(fold_in(base, version), {0: clients,
+        # 1: server}) with per-dispatch positions), so the degenerate sync
+        # limit consumes identical noise
+        self.priv = get_privatizer(resolve_privatizer(spec))
         self.sim = DispatchSimulator(self.model, trainer.sampler,
                                      spec.num_clients, self.max_inflight)
         # exact per-client wire bytes, derived from the sync round's
@@ -267,15 +274,25 @@ class AsyncBufferedEngine:
         compression round-trip, per-client loss and post-compression
         drift rows instead of their means (the means happen at
         aggregation over the *buffered* rows)."""
-        spec, solver, up = self.spec, self.solver, self.up
+        spec, solver, up, priv = self.spec, self.solver, self.up, self.priv
         fn = partial(client_update, self.trainer._grad_fn, spec,
                      use_fused_update=self.trainer._use_fused_update)
 
         def client_fn(x_cl, c_cl, c_i, batches, slots_in, res_in, k_up,
-                      positions):
+                      k_priv, positions):
             dy, dc, c_i_new, slots_new, losses = jax.vmap(
                 fn, in_axes=(None, None, 0, 0, 0 if solver.stateful else None)
             )(x_cl, c_cl, c_i, batches, slots_in)
+            clipped = None
+            if priv.clips:
+                # clip -> (distributed noise) -> compress, exactly as in
+                # run_round's client_parallel block
+                dy, clipped = jax.vmap(lambda d: priv.clip(spec, d))(dy)
+                if priv.noise_at == "client":
+                    pkeys = jax.vmap(
+                        lambda i: jax.random.fold_in(k_priv, i))(positions)
+                    dy = jax.vmap(
+                        lambda d, k: priv.client_noise(spec, d, k))(dy, pkeys)
             res_new = None
             if up.name != "none":
                 res = res_in if res_in is not None else up.init_residual(dy)
@@ -288,7 +305,7 @@ class AsyncBufferedEngine:
                 else:
                     dy, res_new = jax.vmap(
                         lambda d, r: up.round_trip(spec, d, r))(dy, res)
-            return dy, dc, c_i_new, res_new, slots_new, losses
+            return dy, dc, c_i_new, res_new, slots_new, losses, clipped
 
         return client_fn
 
@@ -302,8 +319,9 @@ class AsyncBufferedEngine:
         spec, algo, weighting = self.spec, self.algo, self.weighting
         opt = get_server_optimizer(resolve_server_optimizer(spec))
         weighted = spec.weighted_aggregation
+        priv = self.priv
 
-        def agg_fn(server, dy, dc, losses, tau, sizes):
+        def agg_fn(server, dy, dc, losses, tau, sizes, noise_key):
             if weighting.uniform and not weighted:
                 dy_mean = tree_mean_leading(dy)
                 dc_mean = tree_mean_leading(dc)
@@ -321,6 +339,8 @@ class AsyncBufferedEngine:
 
                 dy_mean = wmean(dy)
                 dc_mean = wmean(dc)
+            if priv.noise_at == "server":
+                dy_mean = priv.server_noise(spec, dy_mean, noise_key)
             x_new, opt_state_new, applied = opt.apply(
                 spec, server.opt_state, server.x, dy_mean)
             c_new = algo.server_control_update(spec, server.c, dc_mean)
@@ -378,20 +398,28 @@ class AsyncBufferedEngine:
             sizes = np.asarray(tr.dataset.client_sizes(ids), np.float32)
         batches = tr.dataset.round_batches(
             ids, self.spec.local_steps, self.spec.local_batch, tr._rng)
-        k_up = positions = None
+        k_up = k_priv = positions = None
+        priv_client = self.priv.noise_at == "client"
+        if tr._comp_keyed or priv_client:
+            positions = jnp.arange(self._ver_positions,
+                                   self._ver_positions + g, dtype=jnp.int32)
         if tr._comp_keyed:
             k_up = jax.random.fold_in(
                 jax.random.fold_in(tr._comp_base_key, self.version), 0)
-            positions = jnp.arange(self._ver_positions,
-                                   self._ver_positions + g, dtype=jnp.int32)
+        if priv_client:
+            k_priv = jax.random.fold_in(
+                jax.random.fold_in(tr._priv_base_key, self.version), 0)
         self._ver_positions += g
-        dy, dc, c_i_new, res_new, slots_new, losses = self._client_fn(
-            x_cl, c_cl, c_i, batches, slots, res, k_up, positions)
+        dy, dc, c_i_new, res_new, slots_new, losses, clipped = (
+            self._client_fn(x_cl, c_cl, c_i, batches, slots, res, k_up,
+                            k_priv, positions))
         payload = {"dy": dy, "dc": dc, "c_i": c_i_new, "loss": losses}
         if self.up.stateful:
             payload["residual"] = res_new
         if self.solver.stateful:
             payload["solver"] = slots_new
+        if self.priv.clips:
+            payload["clipped"] = clipped
         for row, d in enumerate(dispatches):
             self._inflight[d.seq] = _Pending(
                 d, self.version, row, payload,
@@ -444,9 +472,18 @@ class AsyncBufferedEngine:
         tau_np = np.array([self.version - p.version for p in buf], np.int64)
         sizes = (jnp.asarray([p.size for p in buf], jnp.float32)
                  if self.spec.weighted_aggregation else None)
+        noise_key = None
+        if self.priv.noise_at == "server":
+            # the sync round's server draw: fold_in(fold_in(base, t), 1)
+            noise_key = jax.random.fold_in(
+                jax.random.fold_in(tr._priv_base_key, self.version), 1)
+        clip_frac = None
+        if self.priv.clips:
+            clip_frac = jnp.mean(
+                jnp.stack([p.payload["clipped"][p.row] for p in buf]))
         server, metrics = self._agg_fn(
             tr.server, dy, dc, losses,
-            jnp.asarray(tau_np, jnp.int32), sizes)
+            jnp.asarray(tau_np, jnp.int32), sizes, noise_key)
         tr.server = server
         self.version += 1
         tr.round_idx = self.version
@@ -462,6 +499,11 @@ class AsyncBufferedEngine:
             self._delivered_since * self._round_bytes_up // S)
         out["bytes_down"] = float(
             self._dispatched_since * self._round_bytes_down // S)
+        if self.priv.name != "none":
+            # exact float64 accountant, like the sync engines' overwrite
+            out["dp_epsilon"] = self.priv.epsilon(self.spec, self.version)
+            if clip_frac is not None:
+                out["dp_clipped_frac"] = float(clip_frac)
         out["round"] = self.version
         # async observability
         out["staleness_mean"] = float(tau_np.mean())
@@ -535,6 +577,8 @@ class AsyncBufferedEngine:
             keys.append("residual")
         if self.solver.stateful:
             keys.append("solver")
+        if self.priv.clips:
+            keys.append("clipped")
         return tuple(keys)
 
     def _row_template(self) -> Dict[str, Any]:
@@ -547,6 +591,8 @@ class AsyncBufferedEngine:
             tmpl["residual"] = tree_cast(x, jnp.float32)
         if self.solver.stateful:
             tmpl["solver"] = self.solver.init(self.spec, x)
+        if self.priv.clips:
+            tmpl["clipped"] = scalar
         return tmpl
 
     def _pending_in_order(self) -> Tuple[List[_Pending], List[_Pending]]:

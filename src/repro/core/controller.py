@@ -76,6 +76,7 @@ from repro.core.local_solver import (
     megakernel_incompatibility,
     resolve_local_solver,
 )
+from repro.core.privatizer import get_privatizer, resolve_privatizer
 from repro.core.rounds import run_round
 from repro.core.sampling import (
     ClientSampler,
@@ -246,6 +247,13 @@ class FederatedTrainer:
         self._comp_keyed = (
             self.compressor.needs_key
             or get_compressor(resolve_downlink(spec)).needs_key)
+        # privacy stream (DESIGN.md §16): the fourth stateless
+        # counter-based stream — round t folds _priv_base_key by t; only
+        # noise-adding privatizers consume it. Clip state is per-cohort,
+        # so the privatizer adds no store row families.
+        self.privatizer = get_privatizer(resolve_privatizer(spec))
+        self._priv_base_key = jax.random.key(seed + 3)
+        self._priv_active = self.privatizer.name != "none"
         # exact per-round communicated bytes (python ints -> float is
         # lossless well past any model size); the device metrics carry
         # the same numbers as fp32 scalars, inexact above 2^24 B/round,
@@ -280,10 +288,11 @@ class FederatedTrainer:
                     f"use_megakernel requested but running the per-step "
                     f"path: {self.megakernel_fallback_reason}", stacklevel=2)
 
-        def round_fn(server, clients, batches, comp_key):
+        def round_fn(server, clients, batches, comp_key, priv_key, dp_round):
             return run_round(grad_fn, spec, server, clients, batches,
                              use_fused_update=use_fused_update,
-                             comp_key=comp_key)
+                             comp_key=comp_key, priv_key=priv_key,
+                             dp_round=dp_round)
 
         self.round_fn = jax.jit(round_fn,
                                 donate_argnums=(0, 1) if donate else ())
@@ -342,19 +351,19 @@ class FederatedTrainer:
             self._plan_futures: OrderedDict = OrderedDict()
 
             def cohort_fn(server, cohort, data, round_ids, slot_ids,
-                          data_key, comp_key, weights, t0, R):
+                          data_key, comp_key, priv_key, weights, t0, R):
                 return run_rounds_cohort(
                     grad_fn, spec, server, cohort, R, data=data,
                     batch_fn=batch_fn, round_ids=round_ids,
                     slot_ids=slot_ids, data_key=data_key, comp_key=comp_key,
-                    start_round=t0, weights=weights,
+                    priv_key=priv_key, start_round=t0, weights=weights,
                     use_fused_update=use_fused_update)
 
             # R is static (one compile per distinct chunk length — the
             # cohort capacity min(N, R*S) is a pure function of R, so the
             # buffer shape is static too); t0 is traced
             self._cohort_fn = jax.jit(
-                cohort_fn, static_argnums=(9,),
+                cohort_fn, static_argnums=(10,),
                 donate_argnums=(0, 1) if donate else ())
         elif self._scan_mode:
             self._device_sizes = (
@@ -384,17 +393,18 @@ class FederatedTrainer:
                 self.device_store = c_store
 
             def chunk_fn(server, store, data, sample_key, data_key,
-                         comp_key, sizes, t0, R):
+                         comp_key, priv_key, sizes, t0, R):
                 return run_rounds(
                     grad_fn, spec, server, store, R, data=data,
                     batch_fn=batch_fn, sample_key=sample_key,
-                    data_key=data_key, comp_key=comp_key, start_round=t0,
-                    sizes=sizes, use_fused_update=use_fused_update)
+                    data_key=data_key, comp_key=comp_key, priv_key=priv_key,
+                    start_round=t0, sizes=sizes,
+                    use_fused_update=use_fused_update)
 
             # R is static (one compile per distinct chunk length); t0 is
             # traced so resume chunks reuse the compilation
             self._scan_fn = jax.jit(
-                chunk_fn, static_argnums=(8,),
+                chunk_fn, static_argnums=(9,),
                 donate_argnums=(0, 1) if donate else ())
 
     @property
@@ -463,7 +473,8 @@ class FederatedTrainer:
             return self._prefetch[0].host_state
         state = {"sampler": self.sampler.get_state(),
                  "data_rng": self._rng.bit_generator.state,
-                 "comp_key": key_state(self._comp_base_key)}
+                 "comp_key": key_state(self._comp_base_key),
+                 "priv_key": key_state(self._priv_base_key)}
         if self._scan_mode:
             state["device_sampler"] = self.device_sampler.get_state()
             state["device_data_key"] = key_state(self._data_base_key)
@@ -477,6 +488,8 @@ class FederatedTrainer:
         self._rng.bit_generator.state = state["data_rng"]
         if "comp_key" in state:
             self._comp_base_key = key_from_state(state["comp_key"])
+        if "priv_key" in state:
+            self._priv_base_key = key_from_state(state["priv_key"])
         if self._scan_mode and "device_sampler" in state:
             self.device_sampler.set_state(state["device_sampler"])
             self._data_base_key = key_from_state(state["device_data_key"])
@@ -487,7 +500,8 @@ class FederatedTrainer:
         time, never reorders them across rounds)."""
         host_state = {"sampler": self.sampler.get_state(),
                       "data_rng": self._rng.bit_generator.state,
-                      "comp_key": key_state(self._comp_base_key)}
+                      "comp_key": key_state(self._comp_base_key),
+                      "priv_key": key_state(self._priv_base_key)}
         ids = self.sampler.sample()
         c_i = self.store.gather(ids)
         uplink_res = (self.residual_store.gather(ids)
@@ -533,12 +547,19 @@ class FederatedTrainer:
             weights=(jnp.asarray(inp.weights)
                      if inp.weights is not None else None),
         )
-        # per-round compression key, stateless in the round index (only
-        # computed for keyed codecs; dispatch order == execution order so
-        # round_idx is this round's absolute index even when pipelined)
+        # per-round compression/privacy keys, stateless in the round
+        # index (only computed when consumed; dispatch order ==
+        # execution order so round_idx is this round's absolute index
+        # even when pipelined)
         comp_key = (jax.random.fold_in(self._comp_base_key, self.round_idx)
                     if self._comp_keyed else None)
-        out = self.round_fn(self.server, clients, inp.batches, comp_key)
+        priv_key = dp_round = None
+        if self._priv_active:
+            priv_key = jax.random.fold_in(self._priv_base_key,
+                                          self.round_idx)
+            dp_round = jnp.asarray(self.round_idx, jnp.int32)
+        out = self.round_fn(self.server, clients, inp.batches, comp_key,
+                            priv_key, dp_round)
         self.server = out.server
         return out.clients, out.metrics
 
@@ -720,6 +741,7 @@ class FederatedTrainer:
             self.server, cohort, self._device_data, plan.round_ids,
             plan.slot_ids, self._data_base_key,
             self._comp_base_key if self._comp_keyed else None,
+            self._priv_base_key if self._priv_active else None,
             weights, t0, R)
         self.server = server
         # gather-ahead for the next chunks while the device crunches this
@@ -744,6 +766,7 @@ class FederatedTrainer:
                 self.server, self.device_store, self._device_data,
                 self.device_sampler.key, self._data_base_key,
                 self._comp_base_key if self._comp_keyed else None,
+                self._priv_base_key if self._priv_active else None,
                 self._device_sizes, self.round_idx, R)
             self.server, self.device_store = server, store
             self._host_store_dirty = True
@@ -753,6 +776,10 @@ class FederatedTrainer:
             self.round_idx += 1
             m = {k: float(v[r]) for k, v in stacked.items()}
             m.update(self._comm_bytes)  # exact ints over the fp32 metrics
+            if self._priv_active:
+                # exact float64 accountant over the fp32 device metric
+                m["dp_epsilon"] = self.privatizer.epsilon(
+                    self.spec, self.round_idx)
             if self.megakernel_fallback_reason is not None:
                 m["megakernel_fallback_reason"] = (
                     self.megakernel_fallback_reason)
@@ -801,6 +828,10 @@ class FederatedTrainer:
         self.round_idx += 1
         out = {k: float(v) for k, v in metrics.items()}
         out.update(self._comm_bytes)  # exact ints over the fp32 metrics
+        if self._priv_active:
+            # exact float64 accountant over the fp32 device metric
+            out["dp_epsilon"] = self.privatizer.epsilon(
+                self.spec, self.round_idx)
         if self.megakernel_fallback_reason is not None:
             out["megakernel_fallback_reason"] = self.megakernel_fallback_reason
         out["round"] = self.round_idx

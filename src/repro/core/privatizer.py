@@ -1,0 +1,265 @@
+"""Differential privacy for the federated round: the ``Privatizer``
+registry (DESIGN.md §16) — the eighth strategy surface.
+
+A privatizer owns three things:
+
+  * **per-update L2 clipping** of each sampled client's model delta dy
+    to ``spec.clip_norm``, measured by a ghost-norm-style *exact* norm:
+    one fused reduction over the concatenated fp32 ravel of every leaf
+    (the packed-layout view — a single deterministic summation order, so
+    the clip is bitwise identical under vmap / scan / the host loop).
+    The clip itself is a ``lax.while_loop`` fixpoint: rescale by
+    ``min(C/norm, 1 - 2^-23)`` until the *measured* fp32 norm is
+    ``<= C`` — not the one-shot ``* C/norm``, whose fp32 rounding can
+    land one ulp above C. The shrink cap strictly decreases any positive
+    normal fp32, so the loop terminates (typically in one step).
+  * **Gaussian noise**, calibrated to the clip norm and
+    ``spec.noise_multiplier`` z, added either at the server after
+    aggregation (``server_gauss``: std ``C·z/S`` on the mean — the
+    trusted-aggregator mechanism) or distributed across the clients
+    before aggregation (``distributed_gauss``: per-client std
+    ``C·z/sqrt(S)``, whose S-client mean has exactly the server
+    mechanism's ``C·z/S`` std — the no-trusted-server variant that
+    composes with secure aggregation).
+  * a **moments accountant**: the closed-form upper bound
+    ``eps(T) = A + 2·sqrt(A·B)`` with ``A = 2·T·q²/z²``,
+    ``B = ln(1/delta)``, ``q = S/N`` — the continuous-order minimizer of
+    the subsampled-Gaussian log-moment bound ``alpha(lam) <=
+    T·q²·lam(lam+1)/z²`` (Abadi et al. 2016, Thm. 1; the +1 term and a
+    2x safety factor are absorbed into A, so this is conservative).
+    Strictly increasing in rounds, strictly decreasing in z. Surfaced in
+    every round's metrics as ``dp_epsilon`` next to
+    ``bytes_up``/``bytes_down`` (fp32 on device so it scan-stacks; the
+    engines overwrite history with the exact float64 :meth:`epsilon`,
+    the same discipline as the bytes metrics).
+
+Composition order is **clip → compress → aggregate** (``core/rounds.py``):
+the sensitivity bound C must hold on the bytes each client *contributes
+to the aggregate*, and the error-feedback codecs are contractive but not
+norm-bounded — clipping after compression would let the residual stream
+re-inject unclipped mass. Distributed noise is added post-clip,
+pre-compression (it rides the same wire budget); server noise touches
+only the aggregated mean, after the codec round-trip.
+
+RNG: privatizers draw from the fourth stateless counter-based stream —
+base key ``jax.random.key(seed + 3)`` held by the trainer, round ``t``
+folds to ``priv_key = fold_in(base, t)``, client ``i`` of the round
+draws ``fold_in(fold_in(priv_key, 0), i)`` and the server draw is
+``fold_in(priv_key, 1)`` — mirroring the compression stream exactly, so
+a checkpoint restore or a scan re-entry replays identical noise
+(tests/test_privatizer.py).
+
+Clip state is per-cohort (a flag per sampled client, averaged into the
+``dp_clipped_frac`` metric) — nothing persists across rounds, so the
+client store gains no new row family and all four engines scan/pipeline
+unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# largest fp32 strictly below 1: multiplying any positive normal fp32 by
+# it strictly decreases the value, which makes the clip fixpoint terminate
+_SHRINK = 1.0 - 2.0 ** -23
+
+
+def global_norm(tree) -> jnp.ndarray:
+    """Exact fp32 L2 norm of a pytree as ONE fused reduction over the
+    concatenated ravel of every leaf (the ghost-norm-style packed path:
+    no per-leaf partial norms, one deterministic summation order — the
+    property the bitwise engine-equivalence tests rely on)."""
+    leaves = [jnp.ravel(l).astype(jnp.float32) for l in jax.tree.leaves(tree)]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    flat = jnp.concatenate(leaves) if len(leaves) > 1 else leaves[0]
+    return jnp.sqrt(jnp.sum(flat * flat))
+
+
+def clip_by_global_norm(tree, clip_norm) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """L2-clip ``tree`` so its measured fp32 :func:`global_norm` is
+    ``<= clip_norm`` *exactly* (not just up to rounding).
+
+    Returns ``(clipped_tree, was_clipped)`` with ``was_clipped`` a fp32
+    0/1 flag. Identity (bitwise) when the norm is already within bounds.
+    The while_loop re-measures after each rescale; the ``1 - 2^-23``
+    shrink cap guarantees progress, so pathological rounding (or an
+    inf norm, which zeroes the tree in one step) cannot loop forever.
+    NaN norms compare false and pass through untouched.
+    """
+    c = jnp.asarray(clip_norm, jnp.float32)
+    t32 = jax.tree.map(lambda l: l.astype(jnp.float32), tree)
+    n0 = global_norm(t32)
+
+    def cond(state):
+        return state[1] > c
+
+    def body(state):
+        t, n = state
+        s = jnp.minimum(c / n, jnp.float32(_SHRINK))
+        # s == 0 only when n is inf (or astronomically above C): zero the
+        # tree outright instead of inf * 0 = nan leaking through
+        t = jax.tree.map(
+            lambda l: jnp.where(s > 0, l * s, jnp.zeros_like(l)), t)
+        return t, global_norm(t)
+
+    t32, _ = jax.lax.while_loop(cond, body, (t32, n0))
+    out = jax.tree.map(lambda l, o: l.astype(o.dtype), t32, tree)
+    return out, (n0 > c).astype(jnp.float32)
+
+
+def gaussian_noise_like(tree, key, std):
+    """``tree + N(0, std²)`` in fp32, cast back to each leaf's dtype.
+    Leaf ``j`` draws from ``fold_in(key, j)`` (the per-leaf fold the
+    compression codecs use), so the noise is a pure function of
+    (key, tree structure) — replayable from a checkpointed base key."""
+    leaves, treedef = jax.tree.flatten(tree)
+    std = jnp.asarray(std, jnp.float32)
+    out = [
+        (l.astype(jnp.float32)
+         + std * jax.random.normal(jax.random.fold_in(key, j), l.shape,
+                                   jnp.float32)).astype(l.dtype)
+        for j, l in enumerate(leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+class Privatizer:
+    """One differential-privacy mechanism for the federated round.
+
+    Class attributes::
+
+      name      registry key
+      clips     whether client deltas are L2-clipped to spec.clip_norm
+      needs_key whether the engine must thread the privacy RNG stream
+      noise_at  "none" | "client" | "server" — where Gaussian noise lands
+
+    Methods (all pure/traceable — they run inside jit/vmap/scan):
+
+      clip(spec, dy)                 one client's delta -> (clipped, flag)
+      client_noise(spec, dy, key)    per-client noise, post-clip pre-codec
+      server_noise(spec, dy_mean, key)  noise on the aggregated mean
+      epsilon(spec, rounds)          exact float64 accountant (host)
+      epsilon_traced(spec, rounds)   fp32 jnp accountant (in-scan metric)
+    """
+
+    name: str = ""
+    clips: bool = False
+    needs_key: bool = False
+    noise_at: str = "none"
+
+    def clip(self, spec, dy):
+        return clip_by_global_norm(dy, spec.clip_norm)
+
+    def client_noise(self, spec, dy, key):
+        raise NotImplementedError
+
+    def server_noise(self, spec, dy_mean, key):
+        raise NotImplementedError
+
+    # -- accountant ----------------------------------------------------
+
+    def _moment(self, spec, rounds):
+        """A(T) = 2·T·q²/z² — the per-order log-moment slope."""
+        q = spec.num_sampled / spec.num_clients
+        return 2.0 * rounds * q * q / (spec.noise_multiplier ** 2)
+
+    def epsilon(self, spec, rounds: int) -> float:
+        """Exact (float64) privacy spend after ``rounds`` rounds at
+        ``delta = spec.dp_delta`` — the value history entries carry."""
+        a = self._moment(spec, float(rounds))
+        b = math.log(1.0 / spec.dp_delta)
+        return a + 2.0 * math.sqrt(a * b)
+
+    def epsilon_traced(self, spec, rounds):
+        """fp32 traceable twin of :meth:`epsilon` (``rounds`` may be a
+        traced round counter — this is the scan-stackable device metric;
+        the engines overwrite history with the exact host value)."""
+        a = jnp.asarray(self._moment(spec, 1.0), jnp.float32) * (
+            jnp.asarray(rounds, jnp.float32))
+        b = jnp.float32(math.log(1.0 / spec.dp_delta))
+        return a + 2.0 * jnp.sqrt(a * b)
+
+
+class NoPrivatizer(Privatizer):
+    """DP off — the identity mechanism. Engines skip every hook, so the
+    trajectory is bit-for-bit the pre-registry one."""
+
+    name = "none"
+
+    def epsilon(self, spec, rounds: int) -> float:
+        return float("inf")
+
+
+class ServerGaussian(Privatizer):
+    """Trusted-aggregator Gaussian mechanism: clip every client delta to
+    C, add ``N(0, (C·z/S)²)`` to the aggregated mean at the server."""
+
+    name = "server_gauss"
+    clips = True
+    needs_key = True
+    noise_at = "server"
+
+    def server_noise(self, spec, dy_mean, key):
+        std = spec.clip_norm * spec.noise_multiplier / spec.num_sampled
+        return gaussian_noise_like(dy_mean, key, std)
+
+
+class DistributedGaussian(Privatizer):
+    """Distributed Gaussian mechanism: clip to C, each client adds
+    ``N(0, (C·z/sqrt(S))²)`` *before* uplink, so the server never sees an
+    un-noised update; the S-client mean carries the server mechanism's
+    exact ``C·z/S`` aggregate std (same accountant)."""
+
+    name = "distributed_gauss"
+    clips = True
+    needs_key = True
+    noise_at = "client"
+
+    def client_noise(self, spec, dy, key):
+        std = (spec.clip_norm * spec.noise_multiplier
+               / math.sqrt(spec.num_sampled))
+        return gaussian_noise_like(dy, key, std)
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors Compressor / Algorithm / ServerOptimizer)
+# ---------------------------------------------------------------------------
+
+
+_PRIVATIZERS: Dict[str, Privatizer] = {}
+
+
+def register_privatizer(priv: Privatizer) -> Privatizer:
+    """Register a ``Privatizer`` instance under its ``name``."""
+    assert priv.name, "Privatizer subclasses must set a name"
+    _PRIVATIZERS[priv.name] = priv
+    return priv
+
+
+def get_privatizer(name: str) -> Privatizer:
+    """Look up a registered privatizer; unknown names fail loudly."""
+    try:
+        return _PRIVATIZERS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown privatizer {name!r}; registered: {privatizer_names()}"
+        ) from None
+
+
+def privatizer_names() -> Tuple[str, ...]:
+    """Sorted names of all registered privatizers."""
+    return tuple(sorted(_PRIVATIZERS))
+
+
+for _p in (NoPrivatizer(), ServerGaussian(), DistributedGaussian()):
+    register_privatizer(_p)
+
+
+def resolve_privatizer(spec) -> str:
+    """The spec's privatizer name ("none" when unset — duck-typed specs
+    predating the field keep working)."""
+    return getattr(spec, "privatizer", "none") or "none"

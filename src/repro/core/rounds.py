@@ -78,6 +78,7 @@ from repro.core.local_solver import (
     resolve_local_solver,
     run_local_steps,
 )
+from repro.core.privatizer import get_privatizer, resolve_privatizer
 from repro.util import uscan
 from repro.core.tree import (
     tree_mean_leading,
@@ -163,7 +164,8 @@ def _bytes_metrics(spec, x, *, stateful_clients: bool):
 
 def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
               batches, use_fused_update: bool = False,
-              shard_fn=None, comp_key=None) -> RoundOutput:
+              shard_fn=None, comp_key=None, priv_key=None,
+              dp_round=None) -> RoundOutput:
     """One communication round over the S sampled clients (typed API).
 
     server:   ``ServerState`` (x, c, server-optimizer slots).
@@ -182,6 +184,24 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
               broadcast draws ``fold_in(comp_key, 1)``, identically
               under both client strategies and all three execution
               modes.
+    priv_key: PRNG key of this round's privacy stream (``fold_in(key(
+              seed+3), t)`` — the fourth stateless stream). Required
+              when ``spec.privatizer`` is a noise-adding mechanism;
+              client ``i`` draws ``fold_in(fold_in(priv_key, 0), i)``
+              and the server draw is ``fold_in(priv_key, 1)``.
+    dp_round: absolute round index (int or traced), required when
+              privatizing — the accountant's ``dp_epsilon`` after this
+              round is ``epsilon(dp_round + 1)``.
+
+    With an active privatizer (DESIGN.md §16) each client's dy is
+    L2-clipped to ``spec.clip_norm`` *before* the uplink codec (clip →
+    compress → aggregate: the sensitivity bound must hold on what each
+    client contributes, and the error-feedback residual stream would
+    otherwise re-inject unclipped mass); distributed noise rides each
+    clipped delta pre-codec, server noise touches only the aggregated
+    mean. The control-variate stream dc is left untouched, exactly like
+    the codecs (perturbing it would break the drift correction the
+    paper is about). Metrics gain ``dp_epsilon`` / ``dp_clipped_frac``.
     """
     algo = get_algorithm(spec.algorithm)
     if algo.whole_batch:
@@ -195,6 +215,20 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
             f"comp_key to run_round")
     k_up = (jax.random.fold_in(comp_key, 0) if comp_key is not None
             else None)
+
+    priv = get_privatizer(resolve_privatizer(spec))
+    privatizing = priv.name != "none"
+    if privatizing:
+        if priv.needs_key and priv_key is None:
+            raise ValueError(
+                f"privatizer {priv.name!r} is keyed: pass priv_key to "
+                f"run_round (the seed+3 stream, folded by round)")
+        if dp_round is None:
+            raise ValueError(
+                f"privatizer {priv.name!r} needs dp_round (the absolute "
+                f"round index) for the dp_epsilon accountant metric")
+    k_priv = (jax.random.fold_in(priv_key, 0) if priv_key is not None
+              else None)
 
     x, c = server.x, server.c
     # what the clients *receive*: the (optionally compressed) broadcast.
@@ -243,10 +277,21 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
         return up.init_residual(dy_like)
 
     uplink_res_new = clients.uplink_residual
+    clipped_frac = None
     if spec.strategy == "client_parallel":
         dy, dc, c_i_new, slots_new, losses = jax.vmap(
             fn, in_axes=(None, None, 0, 0, 0 if solver.stateful else None)
         )(x_cl, c_cl, c_i, batches, slots_in)
+        if privatizing and priv.clips:
+            # clip -> (distributed noise) -> compress: the codec sees a
+            # norm-bounded, already-noised delta
+            dy, clipped = jax.vmap(lambda d: priv.clip(spec, d))(dy)
+            clipped_frac = jnp.mean(clipped)
+            if priv.noise_at == "client":
+                pkeys = jax.vmap(lambda i: jax.random.fold_in(k_priv, i))(
+                    jnp.arange(spec.num_sampled))
+                dy = jax.vmap(
+                    lambda d, k: priv.client_noise(spec, d, k))(dy, pkeys)
         if up.name != "none":
             res = _res0(dy)
             if up.needs_key:
@@ -267,13 +312,27 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
         w_seq = (wnorm if weights is not None
                  else jnp.full((s,), 1.0 / s, jnp.float32))
         compressing = up.name != "none"
+        clipping = privatizing and priv.clips
+        # the per-client index feeds the keyed codecs and/or the
+        # per-client privacy noise keys
+        need_i = ((compressing and up.needs_key)
+                  or (privatizing and priv.noise_at == "client"))
 
         def scan_body(carry, inp):
-            dy_acc, dc_acc, loss_acc = carry
+            if clipping:
+                dy_acc, dc_acc, loss_acc, clip_acc = carry
+            else:
+                dy_acc, dc_acc, loss_acc = carry
             ci_k, batch_k, w_k = inp["c_i"], inp["batch"], inp["w"]
             slots_k = inp["slots"] if solver.stateful else None
             dy_k, dc_k, ci_new_k, slots_new_k, loss_k = fn(
                 x_cl, c_cl, ci_k, batch_k, slots_k)
+            if clipping:
+                dy_k, clipped_k = priv.clip(spec, dy_k)
+                clip_acc = clip_acc + clipped_k
+                if priv.noise_at == "client":
+                    dy_k = priv.client_noise(
+                        spec, dy_k, jax.random.fold_in(k_priv, inp["i"]))
             if compressing:
                 key_k = (jax.random.fold_in(k_up, inp["i"]) if up.needs_key
                          else None)
@@ -298,25 +357,41 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
                 ys["res"] = res_new_k
             if solver.stateful:
                 ys["slots"] = slots_new_k
+            if clipping:
+                return (dy_acc, dc_acc, loss_acc + loss_k, clip_acc), ys
             return (dy_acc, dc_acc, loss_acc + loss_k), ys
 
         xs = {"c_i": c_i, "batch": batches, "w": w_seq}
-        if compressing:
+        if need_i or compressing:
+            # "i" stays in xs for every compressing config (the
+            # pre-privatizer layout — unkeyed codecs just ignore it)
             xs["i"] = jnp.arange(s, dtype=jnp.int32)
+        if compressing:
             xs["res"] = _res0(c_i)
         if solver.stateful:
             xs["slots"] = slots_in
         zeros = tree_zeros_like(x)
-        (dy_mean, dc_mean, loss_sum), ys = uscan(
-            scan_body,
-            (zeros, tree_zeros_like(c), jnp.zeros((), jnp.float32)), xs,
-        )
+        carry0 = (zeros, tree_zeros_like(c), jnp.zeros((), jnp.float32))
+        if clipping:
+            carry0 = carry0 + (jnp.zeros((), jnp.float32),)
+        carry_out, ys = uscan(scan_body, carry0, xs)
+        if clipping:
+            dy_mean, dc_mean, loss_sum, clip_sum = carry_out
+            clipped_frac = clip_sum / s
+        else:
+            dy_mean, dc_mean, loss_sum = carry_out
         c_i_new = ys["c_i"]
         if compressing:
             uplink_res_new = ys["res"]
         slots_new = ys.get("slots")
         loss = loss_sum / s
         drift = tree_norm(dy_mean)
+
+    # trusted-aggregator noise lands on the aggregated mean, after the
+    # codec round-trip and before the server optimizer sees it
+    if privatizing and priv.noise_at == "server":
+        dy_mean = priv.server_noise(
+            spec, dy_mean, jax.random.fold_in(priv_key, 1))
 
     # server update (eq. 5 / alg. 1 line 16-17) through the registered
     # server optimizer (sgd / heavy-ball momentum / FedAdam), applied to
@@ -332,6 +407,14 @@ def run_round(grad_fn, spec, server: ServerState, clients: ClientRoundState,
         "update_norm": tree_norm(applied),
         **_bytes_metrics(spec, x, stateful_clients=algo.stateful_clients),
     }
+    if privatizing:
+        # fp32 so they scan-stack like every metric; the engines
+        # overwrite history's dp_epsilon with the exact float64
+        # accountant, the same discipline as the bytes metrics
+        metrics["dp_epsilon"] = priv.epsilon_traced(
+            spec, jnp.asarray(dp_round, jnp.float32) + 1.0)
+        if clipped_frac is not None:
+            metrics["dp_clipped_frac"] = clipped_frac
     return RoundOutput(
         server=ServerState(x=x_new, c=c_new, opt_state=opt_state_new),
         clients=ClientRoundState(c_i=c_i_new,

@@ -24,6 +24,7 @@ from repro.core import (
     availability_names,
     compressor_names,
     local_solver_names,
+    privatizer_names,
     server_optimizer_names,
     staleness_weighting_names,
     store_backend_names,
@@ -89,10 +90,10 @@ def main(argv=None):
                          "megakernel_fallback_reason in round metrics "
                          "(DESIGN.md §15)")
     ap.add_argument("--list-registries", action="store_true",
-                    help="print the seven strategy registries (algorithms, "
+                    help="print the eight strategy registries (algorithms, "
                          "server optimizers, compressors, local solvers, "
                          "store backends, availability models, staleness "
-                         "weightings) and exit")
+                         "weightings, privatizers) and exit")
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
     ap.add_argument("--compress", default="none",
@@ -104,6 +105,22 @@ def main(argv=None):
     ap.add_argument("--compress-downlink", default="none",
                     choices=list(compressor_names()),
                     help="codec for the server->client (x, c) broadcast")
+    ap.add_argument("--privatizer", default="none",
+                    choices=list(privatizer_names()),
+                    help="differential-privacy mechanism: L2-clip every "
+                         "client delta and add Gaussian noise at the "
+                         "server (server_gauss) or on each client "
+                         "(distributed_gauss); the dp_epsilon accountant "
+                         "rides every round's metrics (DESIGN.md §16)")
+    ap.add_argument("--clip-norm", type=float, default=0.0,
+                    help="per-update L2 sensitivity bound C of the DP "
+                         "mechanism (required when --privatizer != none)")
+    ap.add_argument("--noise-multiplier", type=float, default=0.0,
+                    help="Gaussian noise multiplier z: the aggregate-mean "
+                         "noise std is C*z/S (required when "
+                         "--privatizer != none)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5,
+                    help="delta of the (epsilon, delta) accountant")
     ap.add_argument("--pipeline-depth", type=int, default=0)
     ap.add_argument("--async-buffer", type=int, default=0,
                     help="async buffered-aggregation engine: aggregate once "
@@ -178,6 +195,7 @@ def main(argv=None):
             ("store_backends", store_backend_names()),
             ("availability_models", availability_names()),
             ("staleness_weightings", staleness_weighting_names()),
+            ("privatizers", privatizer_names()),
         ):
             print(f"{title}: {' '.join(names)}")
         return None
@@ -202,6 +220,10 @@ def main(argv=None):
         compress=args.compress,
         compress_k=args.compress_k,
         compress_downlink=args.compress_downlink,
+        privatizer=args.privatizer,
+        clip_norm=args.clip_norm,
+        noise_multiplier=args.noise_multiplier,
+        dp_delta=args.dp_delta,
     )
     data = SyntheticLMFederated(args.clients, cfg.vocab_size, args.seq_len,
                                 heterogeneity=args.heterogeneity,
@@ -244,6 +266,12 @@ def main(argv=None):
     if trainer.scan_active:
         print(f"scanned engine: on-device chunks of <= {args.scan_rounds} "
               f"rounds")
+    if args.privatizer != "none":
+        eps = trainer.privatizer.epsilon(spec, args.rounds)
+        print(f"privatizer: {args.privatizer} clip={args.clip_norm} "
+              f"z={args.noise_multiplier} -> epsilon="
+              f"{eps:.3f} at delta={args.dp_delta} after "
+              f"{args.rounds} rounds")
     if args.use_megakernel:
         reason = trainer.megakernel_fallback_reason
         print("megakernel: fused K-step local loop" if reason == ""

@@ -46,16 +46,22 @@ def local_eta_table(name: str, eta_l: float, K: int) -> List[float]:
     """The K per-local-step step sizes of one round, as plain floats.
 
     ``constant`` is exactly eta_l every step; ``warmup`` ramps linearly
-    over the first ceil(K/4) steps; ``cosine`` decays from eta_l to 0
-    over the K steps. K is static under jit, so the caller embeds the
-    table as a (K,) constant and indexes it with the traced step counter.
+    over the first ceil(K/4) steps; ``cosine`` decays from eta_l to its
+    floor of 0 *endpoint-inclusive* over the K steps — step 0 is exactly
+    eta_l and step K-1 is exactly 0.0 (the decay horizon is K-1, so the
+    last step evaluates cos(pi); with K=1 the single entry stays eta_l —
+    there is no later step to decay toward). K is static under jit, so
+    the caller embeds the table as a (K,) constant and indexes it with
+    the traced step counter.
     """
     if name == "constant":
         fn = constant(eta_l)
     elif name == "warmup":
         fn = linear_warmup(eta_l, max(1, -(-K // 4)))
     elif name == "cosine":
-        fn = cosine_decay(eta_l, K)
+        # horizon K-1, not K: cosine_decay(lr, K) at step K-1 evaluates
+        # t=(K-1)/K < 1 and the table never reached the documented floor
+        fn = cosine_decay(eta_l, max(K - 1, 1))
     else:
         raise ValueError(
             f"unknown eta_l schedule {name!r}; known: {_LOCAL_SCHEDULES}")

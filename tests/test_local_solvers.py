@@ -229,6 +229,10 @@ def test_schedule_tables_monotone(K, eta):
     cos = local_eta_table("cosine", eta, K)
     assert cos[0] == eta
     assert all(a >= b - 1e-12 for a, b in zip(cos, cos[1:]))
+    # endpoint-inclusive decay: the last step reaches the floor exactly
+    # (K=1 has no later step to decay toward — the single entry stays
+    # eta_l)
+    assert cos[-1] == (eta if K == 1 else 0.0)
 
 
 def test_sgd_sched_rejects_step_count_mismatch():

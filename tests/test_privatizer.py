@@ -1,0 +1,409 @@
+"""Privatizer-registry contract tests (DESIGN.md §16).
+
+The eighth registry must hold, under hypothesis-driven shapes / scales /
+seeds:
+
+  * exact clipping — the post-clip fp32 :func:`global_norm` is
+    ``<= clip_norm`` *exactly* (the while_loop fixpoint, not the
+    one-shot rescale whose rounding can land one ulp above C), and a
+    tree already within bounds passes through bitwise untouched,
+  * noise-stream determinism — the Gaussian draw is a pure function of
+    the folded key (same key -> identical bits, different fold ->
+    different bits), so checkpoint replay and scan re-entry reproduce
+    identical noise,
+  * accountant monotonicity — dp_epsilon is strictly increasing in
+    rounds and strictly decreasing in the noise multiplier, with the
+    fp32 traced twin tracking the float64 host value,
+
+plus engine-level contracts: the ``none`` privatizer is bit-for-bit the
+pre-registry trajectory (and emits no dp metrics), DP runs agree
+bitwise across sync / pipelined / async-degenerate engines (the scanned
+engine's DP equivalence lives in tests/test_scan_engine.py), spec
+validation rejects meaningless combinations loudly, and the >2^24
+bytes-metrics exactness regression covers all four engines.
+"""
+import math
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # Degrade per-test instead of importorskip'ing the module: the
+    # registry / validation / engine tests below need no hypothesis
+    # and must run everywhere. The skip reason matches check_skips.py's
+    # missing-optional-dependency pattern so CI still proves the
+    # property tests execute there.
+    def given(**kw):
+        return lambda fn: pytest.mark.skip(
+            reason="could not import 'hypothesis'")(fn)
+
+    def settings(**kw):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 — stands in for hypothesis.strategies
+        integers = staticmethod(lambda a, b: None)
+        floats = staticmethod(lambda a, b: None)
+        sampled_from = staticmethod(lambda xs: None)
+
+from repro.configs.base import FedRoundSpec
+from repro.core import (
+    FederatedTrainer,
+    get_privatizer,
+    privatizer_names,
+    register_privatizer,
+    resolve_privatizer,
+)
+from repro.core.compression import round_comm_bytes
+from repro.core.privatizer import (
+    Privatizer,
+    clip_by_global_norm,
+    gaussian_noise_like,
+    global_norm,
+)
+from repro.data import make_similarity_quadratics, quadratic_loss
+
+N, S, DIM = 10, 3, 6
+
+
+def _tree(seed, dim, scale):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(dim,)) * scale, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(2, dim)) * scale, jnp.float32),
+    }
+
+
+def _spec(**kw):
+    base = dict(algorithm="scaffold", num_clients=N, num_sampled=S,
+                local_steps=4, local_batch=1, eta_l=0.05, eta_g=0.7)
+    base.update(kw)
+    return FedRoundSpec(**base)
+
+
+def _trainer(spec, seed=0, **kw):
+    ds = make_similarity_quadratics(N, DIM, delta=0.3, G=4.0, mu=0.3,
+                                    seed=1)
+    init = lambda key: {"x": jnp.ones((DIM,), jnp.float32)}
+    return FederatedTrainer(quadratic_loss, init, spec, ds, seed=seed, **kw)
+
+
+def _state(tr):
+    ids = np.arange(tr.store.num_clients)
+    leaves = (jax.tree.leaves(tr.x) + jax.tree.leaves(tr.c)
+              + jax.tree.leaves(tr.server.opt_state)
+              + jax.tree.leaves(tr.store.gather(ids)))
+    return [np.asarray(leaf) for leaf in leaves]
+
+
+def _assert_bitwise(a, b):
+    assert len(a) == len(b)
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(xa, xb)
+
+
+# ------------------------------------------------------------- clipping
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(1, 64), scale=st.floats(1e-3, 1e3),
+       clip=st.floats(1e-3, 10.0), seed=st.integers(0, 2 ** 16))
+def test_clip_norm_bound_is_exact(dim, scale, clip, seed):
+    """The measured fp32 norm after clipping is <= clip_norm *exactly* —
+    no one-ulp overshoot from the rescale's rounding."""
+    tree = _tree(seed, dim, scale)
+    clipped, flag = clip_by_global_norm(tree, clip)
+    n_before = float(global_norm(tree))
+    n_after = float(global_norm(clipped))
+    assert n_after <= clip
+    assert float(flag) == (1.0 if n_before > clip else 0.0)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(clipped)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(dim=st.integers(1, 64), seed=st.integers(0, 2 ** 16))
+def test_clip_identity_below_threshold(dim, seed):
+    """A tree whose norm is already within bounds passes through with
+    its exact bits (not a multiply-by-one round trip)."""
+    tree = _tree(seed, dim, 1.0)
+    clip = float(global_norm(tree)) * 2.0 + 1.0
+    clipped, flag = clip_by_global_norm(tree, clip)
+    assert float(flag) == 0.0
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(clipped)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_clip_edge_cases():
+    """inf norms zero the tree in one fixpoint step; NaN norms compare
+    false against C and pass through; clipping is jit/vmap-safe."""
+    inf_tree = {"w": jnp.asarray([jnp.inf, 1.0], jnp.float32)}
+    clipped, flag = clip_by_global_norm(inf_tree, 1.0)
+    assert float(flag) == 1.0
+    np.testing.assert_array_equal(np.asarray(clipped["w"]),
+                                  np.zeros(2, np.float32))
+    nan_tree = {"w": jnp.asarray([jnp.nan, 1.0], jnp.float32)}
+    passed, flag = clip_by_global_norm(nan_tree, 1.0)
+    assert float(flag) == 0.0
+    np.testing.assert_array_equal(np.asarray(passed["w"]),
+                                  np.asarray(nan_tree["w"]))
+    batch = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)}
+    vclipped, vflags = jax.jit(jax.vmap(
+        lambda t: clip_by_global_norm(t, 2.0)))(batch)
+    for row in np.asarray(
+            jnp.sqrt(jnp.sum(vclipped["w"] ** 2, axis=1))):
+        assert row <= 2.0
+
+
+# ----------------------------------------------------------- noise RNG
+
+
+@settings(max_examples=10, deadline=None)
+@given(dim=st.integers(1, 32), seed=st.integers(0, 2 ** 16))
+def test_noise_stream_determinism(dim, seed):
+    """Same folded key -> identical noise bits; a different fold of the
+    same base key -> different bits (the replayable seed+3 stream)."""
+    tree = _tree(seed, dim, 1.0)
+    base = jax.random.key(seed + 3)
+    k0 = jax.random.fold_in(base, 0)
+    a = gaussian_noise_like(tree, k0, 0.5)
+    b = gaussian_noise_like(tree, jax.random.fold_in(base, 0), 0.5)
+    c = gaussian_noise_like(tree, jax.random.fold_in(base, 1), 0.5)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    assert any(
+        not np.array_equal(np.asarray(la), np.asarray(lc))
+        for la, lc in zip(jax.tree.leaves(a), jax.tree.leaves(c)))
+
+
+def test_noise_zero_std_is_identity_values():
+    tree = _tree(0, 8, 1.0)
+    out = gaussian_noise_like(tree, jax.random.key(0), 0.0)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------- accountant
+
+
+@settings(max_examples=25, deadline=None)
+@given(rounds=st.integers(1, 500), z=st.floats(0.3, 10.0),
+       s=st.integers(1, 9))
+def test_accountant_monotone(rounds, z, s):
+    """epsilon is strictly increasing in rounds and strictly decreasing
+    in the noise multiplier; the fp32 traced twin tracks the float64
+    host value."""
+    priv = get_privatizer("server_gauss")
+    spec = SimpleNamespace(num_clients=10, num_sampled=s,
+                           noise_multiplier=z, dp_delta=1e-5)
+    e1 = priv.epsilon(spec, rounds)
+    e2 = priv.epsilon(spec, rounds + 1)
+    assert 0.0 < e1 < e2
+    quieter = SimpleNamespace(num_clients=10, num_sampled=s,
+                              noise_multiplier=z * 2.0, dp_delta=1e-5)
+    assert priv.epsilon(quieter, rounds) < e1
+    traced = float(priv.epsilon_traced(spec, jnp.float32(rounds)))
+    assert traced == pytest.approx(e1, rel=1e-4)
+
+
+def test_accountant_closed_form():
+    """Pin the closed form eps = A + 2*sqrt(A*B), A = 2*T*q^2/z^2,
+    B = ln(1/delta) — the documented conservative moments bound."""
+    priv = get_privatizer("distributed_gauss")
+    spec = SimpleNamespace(num_clients=100, num_sampled=10,
+                           noise_multiplier=1.1, dp_delta=1e-5)
+    a = 2.0 * 50 * 0.1 ** 2 / 1.1 ** 2
+    b = math.log(1e5)
+    assert priv.epsilon(spec, 50) == pytest.approx(
+        a + 2.0 * math.sqrt(a * b), rel=1e-12)
+    assert get_privatizer("none").epsilon(spec, 50) == float("inf")
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_registry_surface():
+    names = privatizer_names()
+    assert names == tuple(sorted(names))
+    assert {"none", "server_gauss", "distributed_gauss"} <= set(names)
+    with pytest.raises(KeyError, match="registered"):
+        get_privatizer("nope")
+    assert resolve_privatizer(SimpleNamespace()) == "none"
+    assert resolve_privatizer(SimpleNamespace(privatizer="")) == "none"
+
+    class Custom(Privatizer):
+        name = "test_custom_priv"
+
+    register_privatizer(Custom())
+    try:
+        assert get_privatizer("test_custom_priv").name == "test_custom_priv"
+        assert "test_custom_priv" in privatizer_names()
+    finally:
+        from repro.core import privatizer as mod
+        del mod._PRIVATIZERS["test_custom_priv"]
+
+
+def test_spec_validation_rejections():
+    """Meaningless DP combinations fail loudly at spec construction."""
+    with pytest.raises(AssertionError):
+        _spec(privatizer="nope")
+    with pytest.raises(AssertionError, match="clip_norm > 0"):
+        _spec(privatizer="server_gauss", noise_multiplier=1.0)
+    with pytest.raises(AssertionError, match="noise_multiplier > 0"):
+        _spec(privatizer="server_gauss", clip_norm=1.0)
+    with pytest.raises(AssertionError, match="dp_delta"):
+        _spec(privatizer="server_gauss", clip_norm=1.0,
+              noise_multiplier=1.0, dp_delta=1.5)
+    with pytest.raises(AssertionError, match="uniform mean"):
+        _spec(privatizer="distributed_gauss", clip_norm=1.0,
+              noise_multiplier=1.0, weighted_aggregation=True)
+    with pytest.raises(AssertionError, match="has no effect"):
+        _spec(clip_norm=1.0)
+    with pytest.raises(AssertionError, match="has no effect"):
+        _spec(noise_multiplier=1.0)
+
+
+# ------------------------------------------------- engine equivalences
+
+
+def test_none_privatizer_is_bitwise_pre_registry():
+    """privatizer='none' (the default) takes zero DP hooks: the
+    trajectory is bit-for-bit the one from a spec that never mentions
+    the DP fields, and no dp_* metric appears in history."""
+    a = _trainer(_spec())
+    b = _trainer(_spec(privatizer="none", clip_norm=0.0,
+                       noise_multiplier=0.0))
+    for _ in range(4):
+        ma, mb = a.run_round(), b.run_round()
+        assert ma == mb
+        assert "dp_epsilon" not in ma and "dp_clipped_frac" not in ma
+    _assert_bitwise(_state(a), _state(b))
+
+
+DP_KW = dict(clip_norm=0.5, noise_multiplier=1.1)
+
+
+@pytest.mark.parametrize("privatizer", ["server_gauss", "distributed_gauss"])
+def test_pipelined_matches_sync_privatized(privatizer):
+    spec = _spec(privatizer=privatizer, **DP_KW)
+    sync = _trainer(spec)
+    pipe = _trainer(spec, pipeline_depth=2)
+    for _ in range(4):
+        ms, mp = sync.run_round(), pipe.run_round()
+        assert ms == mp
+    _assert_bitwise(_state(sync), _state(pipe))
+
+
+@pytest.mark.parametrize("privatizer", ["server_gauss", "distributed_gauss"])
+def test_async_degenerate_limit_privatized(privatizer):
+    """M == K == S, always-on, constant weighting: the async engine's DP
+    path (version-folded privacy stream, payload clip flags) reproduces
+    the sync engine exactly — dp_epsilon and dp_clipped_frac included."""
+    spec = _spec(privatizer=privatizer, **DP_KW)
+    sync = _trainer(spec)
+    poof = _trainer(spec, async_buffer=S, max_inflight=S)
+    assert poof.async_active
+    for _ in range(4):
+        ms, ma = sync.run_round(), poof.run_round()
+        for key in ("loss", "bytes_up", "bytes_down", "dp_epsilon",
+                    "dp_clipped_frac", "round"):
+            assert ms[key] == ma[key], (key, ms[key], ma[key])
+    _assert_bitwise(_state(sync), _state(poof))
+
+
+def test_trainer_epsilon_monotone_and_clip_frac_bounded():
+    """History carries the exact float64 accountant value — strictly
+    increasing round over round — and a clip fraction in [0, 1]."""
+    tr = _trainer(_spec(privatizer="server_gauss", **DP_KW))
+    tr.run(5)
+    eps = [h["dp_epsilon"] for h in tr.history]
+    assert all(b > a for a, b in zip(eps, eps[1:]))
+    assert eps[0] == tr.privatizer.epsilon(tr.spec, 1)
+    for h in tr.history:
+        assert 0.0 <= h["dp_clipped_frac"] <= 1.0
+
+
+def test_dp_composes_with_compression():
+    """clip -> compress -> aggregate: a DP run under an error-feedback
+    codec still reports the codec's wire bytes and a monotone epsilon."""
+    spec = _spec(privatizer="distributed_gauss", compress="int8_ef",
+                 **DP_KW)
+    tr = _trainer(spec)
+    plain = _trainer(_spec(compress="int8_ef"))
+    m, mp = tr.run_round(), plain.run_round()
+    assert m["bytes_up"] == mp["bytes_up"]
+    assert m["bytes_down"] == mp["bytes_down"]
+    assert m["dp_epsilon"] > 0.0
+
+
+# ------------------------------------- bytes-metrics exactness (>2^24)
+
+
+class _BigVecFederated:
+    """Minimal federated dataset over a D-dim linear model — just enough
+    surface (host + device data protocols) to drive all four engines
+    with a payload big enough that fp32 cannot carry the byte count."""
+
+    def __init__(self, n):
+        self.num_clients = n
+
+    def round_batches(self, ids, K, b, rng):
+        del rng
+        return {"t": jnp.ones((len(ids), K, b, 1), jnp.float32)}
+
+    def client_sizes(self, ids):
+        return np.ones(len(ids), np.int64)
+
+    def device_data(self):
+        return {"_": jnp.zeros((), jnp.float32)}
+
+    def device_batch_fn(self, K, b):
+        def batch_fn(data, ids, key):
+            del data, key
+            return {"t": jnp.ones((ids.shape[0], K, b, 1), jnp.float32)}
+
+        return batch_fn
+
+    def device_client_sizes(self):
+        return jnp.ones((self.num_clients,), jnp.float32)
+
+
+_BIG_D = 3_500_001
+
+
+def _big_loss(params, batch):
+    loss = 0.5 * jnp.mean(batch["t"]) * jnp.sum(params["w"] ** 2)
+    return loss, {"loss": loss}
+
+
+def _big_trainer(**kw):
+    spec = _spec(num_clients=4, local_steps=1, compress="int8_ef")
+    init = lambda key: {"w": jnp.full((_BIG_D,), 0.1, jnp.float32)}
+    return FederatedTrainer(_big_loss, init, spec, _BigVecFederated(4),
+                            seed=0, **kw)
+
+
+@pytest.mark.parametrize("mode", ["sync", "pipelined", "scanned", "async"])
+def test_bytes_metrics_exact_above_2_24(mode):
+    """Regression (DESIGN.md §11 bytes contract): above 2^24 bytes/round
+    the fp32 device metric is inexact, so every engine must overwrite
+    history with the exact host-side integer. S=3 int8_ef scaffold at
+    D=3,500,001 gives bytes_up = 3*(5D+4) = 52,500,027 — odd, hence not
+    fp32-representable (fp32 spacing there is 4)."""
+    kw = {"pipelined": dict(pipeline_depth=1),
+          "scanned": dict(scan_rounds=2),
+          "async": dict(async_buffer=S, max_inflight=S)}.get(mode, {})
+    tr = _big_trainer(**kw)
+    exact = round_comm_bytes(tr.spec, tr.x, stateful_clients=True)
+    up = exact["bytes_up"]
+    assert up > 2 ** 24
+    assert float(np.float32(up)) != float(up)  # fp32 would corrupt it
+    tr.run(2)
+    for h in tr.history:
+        assert h["bytes_up"] == float(up)
+        assert h["bytes_down"] == float(exact["bytes_down"])
+        assert float(h["bytes_up"]).is_integer()

@@ -81,7 +81,10 @@ def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
     (incl. the uplink error-feedback residuals under an active codec and
     the solver slots under a stateful local solver), cohorts/data/
     compression keys drawn from the same fold_in(key, t) streams the
-    trainer's scan uses (seed, seed+1, seed+2).
+    trainer's scan uses (seed, seed+1, seed+2, and seed+3 when a
+    privatizer is active — whose fp32 ``dp_epsilon`` metric is then
+    overwritten by the exact float64 accountant, exactly as the trainer
+    does).
 
     Returns ``(server, stores, hist)`` where ``stores`` has exactly the
     trainer's device-store layout — the bare c_i tree, or the
@@ -91,8 +94,10 @@ def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
         ClientStateStore,
         get_compressor,
         get_local_solver,
+        get_privatizer,
         resolve_compressor,
         resolve_local_solver,
+        resolve_privatizer,
     )
     from repro.core.compression import resolve_downlink
     from repro.core.tree import tree_cast
@@ -106,11 +111,19 @@ def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
     keyed = (comp.needs_key
              or get_compressor(resolve_downlink(spec)).needs_key)
     ckey = jax.random.key(seed + 2) if keyed else None
+    priv = get_privatizer(resolve_privatizer(spec))
+    privatizing = priv.name != "none"
+    pkey = jax.random.key(seed + 3) if privatizing else None
     samp = jax.jit(partial(device_sample_ids, num_clients=spec.num_clients,
                            num_sampled=spec.num_sampled))
-    rj = jax.jit(lambda s, c, b, k: run_round(
-        grad_fn, spec, s, c, b, use_fused_update=use_fused_update,
-        comp_key=k))
+    if privatizing:
+        rj = jax.jit(lambda s, c, b, k, pk, t: run_round(
+            grad_fn, spec, s, c, b, use_fused_update=use_fused_update,
+            comp_key=k, priv_key=pk, dp_round=t))
+    else:
+        rj = jax.jit(lambda s, c, b, k: run_round(
+            grad_fn, spec, s, c, b, use_fused_update=use_fused_update,
+            comp_key=k))
     params = _init_params(None)
     server = init_server_state(spec, params)
     c_store = ClientStateStore(params, spec.num_clients)
@@ -130,15 +143,25 @@ def _host_loop_device_rng(spec, ds, rounds, seed=0, use_fused_update=False):
                              if res_store is not None else None),
             solver_slots=(jax.tree.map(jnp.asarray, slot_store.gather(ids))
                           if slot_store is not None else None))
-        out = rj(server, clients, batches,
-                 jax.random.fold_in(ckey, t) if keyed else None)
+        ck = jax.random.fold_in(ckey, t) if keyed else None
+        if privatizing:
+            out = rj(server, clients, batches, ck,
+                     jax.random.fold_in(pkey, t),
+                     jnp.asarray(t, jnp.int32))
+        else:
+            out = rj(server, clients, batches, ck)
         server = out.server
         c_store.scatter(ids, out.clients.c_i)
         if res_store is not None:
             res_store.scatter(ids, out.clients.uplink_residual)
         if slot_store is not None:
             slot_store.scatter(ids, out.clients.solver_slots)
-        hist.append({k: float(v) for k, v in out.metrics.items()})
+        h = {k: float(v) for k, v in out.metrics.items()}
+        if privatizing:
+            # same host-side discipline as the trainer: the exact float64
+            # accountant overwrites the fp32 device metric
+            h["dp_epsilon"] = priv.epsilon(spec, t + 1)
+        hist.append(h)
     all_ids = np.arange(spec.num_clients)
     if res_store is not None or slot_store is not None:
         stores = {"c_i": c_store.gather(all_ids)}
@@ -192,6 +215,50 @@ def test_chunk_size_invariance(chunks):
     tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
                           scan_rounds=max(chunks))
     for c in chunks:
+        tr._run_scan_chunk(c)
+    _assert_tree_equal(ref.x, tr.x)
+    _assert_tree_equal(ref.device_store, tr.device_store)
+    assert ref.history == tr.history
+
+
+@pytest.mark.parametrize("compress", ["none", "int8_ef"])
+@pytest.mark.parametrize("privatizer", ["server_gauss", "distributed_gauss"])
+def test_scanned_matches_host_loop_privatized(privatizer, compress):
+    """DESIGN.md §16 acceptance: a clipped+noised round scans bitwise —
+    the privacy stream (seed+3), the clip fixpoint and the Gaussian
+    draws all reproduce exactly between one scanned chunk and R
+    host-loop rounds, with and without an uplink codec underneath
+    (clip -> compress -> aggregate ordering)."""
+    spec = _spec("scaffold", "momentum", privatizer=privatizer,
+                 clip_norm=0.5, noise_multiplier=1.1, compress=compress)
+    ds = _dataset()
+    server_h, stores_h, hist_h = _host_loop_device_rng(spec, ds, ROUNDS)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=ROUNDS)
+    assert tr.scan_active, tr.scan_fallback_reason
+    tr.run(ROUNDS)
+    _assert_tree_equal(server_h.x, tr.x)
+    _assert_tree_equal(server_h.c, tr.c)
+    _assert_tree_equal(stores_h, tr.device_store)
+    assert hist_h == [{k: v for k, v in h.items() if k != "round"}
+                      for h in tr.history]
+    eps = [h["dp_epsilon"] for h in tr.history]
+    assert all(b > a for a, b in zip(eps, eps[1:]))
+
+
+def test_chunk_size_invariance_privatized():
+    """The privacy stream folds by the absolute round index, so any
+    chunking of 6 DP rounds produces the same bits and the same
+    monotone epsilon history."""
+    spec = _spec("scaffold", "sgd", privatizer="server_gauss",
+                 clip_norm=0.5, noise_multiplier=1.1)
+    ds = _dataset()
+    ref = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                           scan_rounds=6)
+    ref.run(6)
+    tr = FederatedTrainer(quadratic_loss, _init_params, spec, ds, seed=0,
+                          scan_rounds=4)
+    for c in (4, 1, 1):
         tr._run_scan_chunk(c)
     _assert_tree_equal(ref.x, tr.x)
     _assert_tree_equal(ref.device_store, tr.device_store)
