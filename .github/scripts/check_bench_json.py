@@ -98,6 +98,35 @@ def check(path: str) -> None:
             assert record["bytes_down_per_round"] > 0, record
             # can legitimately dip below 1.0 (large --k on tiny leaves)
             assert record["uplink_ratio"] > 0, record
+    if payload["bench"] == "adapter":
+        spaces = {record["update_space"] for record in records}
+        # acceptance: the full-payload baseline rows ride in the artifact
+        assert "full" in spaces, spaces
+        for record in records:
+            # acceptance: every adapter point rides the scanned engine
+            assert record["mode"] == "scanned", record
+            assert record["rounds_per_s"] > 0, record
+            assert record["bytes_up_per_round"] > 0, record
+            assert record["uplink_vs_full"] > 0, record
+            if record["update_space"] == "lora":
+                assert record["lora_rank"] >= 1, record
+                assert record["trainable_params"] < record["full_params"], record
+        codecs = {record["codec"] for record in records}
+        for codec in codecs:
+            base = [
+                r for r in records
+                if r["codec"] == codec and r["update_space"] == "full"]
+            assert base, f"no full baseline row for codec {codec!r}"
+            lora = sorted(
+                (r for r in records
+                 if r["codec"] == codec and r["update_space"] == "lora"),
+                key=lambda r: r["lora_rank"])
+            assert len(lora) >= 2, f"need a rank sweep for codec {codec!r}"
+            ups = [r["bytes_up_per_round"] for r in lora]
+            # acceptance: payload strictly monotone in rank, below full
+            assert all(a < b for a, b in zip(ups, ups[1:])), ups
+            assert ups[-1] < base[0]["bytes_up_per_round"], (
+                ups, base[0]["bytes_up_per_round"])
     if payload["bench"] == "dp":
         privs = {record["privatizer"] for record in records}
         assert "none" in privs, privs  # the DP-off baseline row

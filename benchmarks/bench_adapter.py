@@ -1,0 +1,127 @@
+"""Adapter sweep on the scanned engine (DESIGN.md §17).
+
+For a rank x codec grid over the ``lora`` update space — plus the
+``full`` baseline row — federated-trains the reduced-LM arch
+(llama3.2-3b reduced preset, synthetic heterogeneous token shards) with
+``scan_rounds=R`` and reports
+
+  rounds/s            wall-clock of the scanned chunk,
+  bytes_up_per_round  the exact host-side payload accounting (delta
+                      payload through the codec + raw delta control
+                      variates) — strictly increasing in rank and far
+                      below the full row,
+  uplink_vs_full      full-baseline bytes_up / this row's (the headline
+                      compression factor of the update space),
+  trainable_params    delta-tree scalar count vs the full model's.
+
+Emits one ``scaffold-bench/v1`` record per grid point —
+``python -m benchmarks.bench_adapter`` writes ``BENCH_adapter.json``
+(validated by .github/scripts/check_bench_json.py: full baseline row
+required, bytes_up monotone in rank; uploaded by the CI bench job;
+``--smoke`` is the CI-speed preset).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+
+from benchmarks.common import bench_argparser, bench_cli
+from repro.configs import get_reduced
+from repro.configs.base import FedRoundSpec
+from repro.core import FederatedTrainer
+from repro.data import SyntheticLMFederated
+from repro.models import model as M
+
+N, S, K, BATCH, SEQ = 8, 2, 2, 2, 32
+
+RANK_GRID = (2, 4, 8)
+CODEC_GRID = ("none", "int8_ef")
+
+
+def _make_trainer(cfg, ds, *, space: str, rank: int, codec: str,
+                  iters: int, seed: int = 0):
+    spec = FedRoundSpec(
+        algorithm="scaffold", num_clients=N, num_sampled=S, local_steps=K,
+        local_batch=BATCH, eta_l=0.02, compress=codec,
+        update_space=space, lora_rank=rank if space == "lora" else 0)
+    return FederatedTrainer(partial(M.loss_fn, cfg),
+                            partial(M.init_params, cfg), spec, ds,
+                            seed=seed, scan_rounds=iters)
+
+
+def bench_point(cfg, ds, *, space: str, rank: int, codec: str, iters: int,
+                n_full: int):
+    tr = _make_trainer(cfg, ds, space=space, rank=rank, codec=codec,
+                       iters=iters)
+    assert tr.scan_active, (space, rank, codec, tr.scan_fallback_reason)
+    tr.run(iters)  # compile the R=iters chunk outside timing
+    t0 = time.perf_counter()
+    tr.run(iters)
+    jax.block_until_ready(tr.x)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    m = tr.history[-1]
+    return {
+        "bench": "adapter",
+        "arch": cfg.name,
+        "update_space": space,
+        "lora_rank": rank if space == "lora" else 0,
+        "codec": codec,
+        "mode": "scanned",
+        "scan_chunk": iters,
+        "us_per_round": us,
+        "rounds_per_s": 1e6 / max(us, 1e-9),
+        "bytes_up_per_round": tr._comm_bytes["bytes_up"],
+        "bytes_down_per_round": tr._comm_bytes["bytes_down"],
+        "trainable_params": tr.update_space.num_params(tr.x),
+        "full_params": n_full,
+        "final_loss": m["loss"],
+    }
+
+
+def run(*, iters: int = 16, ranks=RANK_GRID, codecs=CODEC_GRID,
+        seed: int = 0):
+    cfg = get_reduced("llama3.2-3b")
+    ds = SyntheticLMFederated(N, cfg.vocab_size, SEQ, seed=seed)
+    n_full = M.count_params_analytic(cfg)
+    rows = []
+    for codec in codecs:
+        rows.append(bench_point(cfg, ds, space="full", rank=0, codec=codec,
+                                iters=iters, n_full=n_full))
+        for rank in ranks:
+            rows.append(bench_point(cfg, ds, space="lora", rank=rank,
+                                    codec=codec, iters=iters,
+                                    n_full=n_full))
+    base_up = {r["codec"]: r["bytes_up_per_round"] for r in rows
+               if r["update_space"] == "full"}
+    for r in rows:
+        r["uplink_vs_full"] = (base_up[r["codec"]]
+                               / max(r["bytes_up_per_round"], 1))
+        print(f"adapter {r['update_space']:4s} r={r['lora_rank']:<2d} "
+              f"codec={r['codec']:7s}: "
+              f"{r['us_per_round']/1e3:8.2f} ms/round "
+              f"({r['rounds_per_s']:6.1f} rounds/s) | "
+              f"up={r['bytes_up_per_round']/1e6:6.2f}MB "
+              f"({r['uplink_vs_full']:5.1f}x vs full) | "
+              f"{r['trainable_params']/1e3:7.1f}k trainable")
+    return rows
+
+
+def main(fast: bool = True, smoke: bool = False, iters: int = 16):
+    del fast  # scale rides on --iters/--smoke (no --full, like bench_dp)
+    ranks, codecs = RANK_GRID, CODEC_GRID
+    if smoke:
+        iters = min(iters, 4)
+        ranks = (4, 8)
+    return run(iters=iters, ranks=ranks, codecs=codecs)
+
+
+if __name__ == "__main__":
+    ap = bench_argparser(__doc__.splitlines()[0], full_flag=False)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-speed preset (clamps the scan chunk to 4 and "
+                         "the rank grid to two points)")
+    ap.add_argument("--iters", type=int, default=16,
+                    help="timed rounds (also the scan chunk size)")
+    bench_cli("adapter", main, parser=ap, forward=("smoke", "iters"))

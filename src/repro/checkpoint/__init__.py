@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     load_checkpoint,
+    load_serving_params,
     load_trainer,
     save_checkpoint,
     save_trainer,

@@ -86,6 +86,12 @@ def _trainer_tree(trainer) -> Dict[str, Any]:
         tree["residuals"] = trainer.residual_store.gather(all_ids)
     if trainer.solver_store is not None:
         tree["solver_slots"] = trainer.solver_store.gather(all_ids)
+    if getattr(trainer, "base_params", None) is not None:
+        # non-identity update space (DESIGN.md §17): "x" above is the
+        # trainable-delta pytree; the frozen base rides next to it so
+        # the checkpoint is self-contained for serving (load_serving_
+        # params merges them without the training config)
+        tree["base"] = trainer.base_params
     return tree
 
 
@@ -100,6 +106,9 @@ def save_trainer(path: str, trainer):
         "round": trainer.round_idx,
         "host_rng": trainer.host_rng_state(),
     }
+    space = getattr(trainer, "update_space", None)
+    if space is not None and space.trains_subset:
+        extra["update_space"] = space.checkpoint_meta(trainer.spec)
     tree = _trainer_tree(trainer)
     engine = getattr(trainer, "async_engine", None)
     if engine is not None:
@@ -114,6 +123,15 @@ def load_trainer(path: str, trainer):
     import dataclasses
 
     flat, extra = _read_checkpoint(path)
+    saved_space = extra.get("update_space", {"name": "full"})["name"] \
+        if "update_space" in extra else "full"
+    trainer_space = getattr(trainer, "update_space", None)
+    trainer_space_name = trainer_space.name if trainer_space else "full"
+    if saved_space != trainer_space_name:
+        raise ValueError(
+            f"checkpoint was trained in update_space={saved_space!r} but "
+            f"the trainer is configured for {trainer_space_name!r}; restore "
+            f"into a matching FedRoundSpec")
     template = _trainer_tree(trainer)
     engine = getattr(trainer, "async_engine", None)
     if engine is not None:
@@ -124,6 +142,20 @@ def load_trainer(path: str, trainer):
         # checkpoint itself, not from the (freshly constructed) trainer
         template["async"] = engine.pending_template(extra["async"])
     tree = _unflatten_into(flat, template)
+    if "base" in template:
+        # the jitted grad fn captured the constructor's base_params as a
+        # compile-time constant — a checkpoint carrying a *different*
+        # base would silently train against stale weights, so the match
+        # must be bitwise
+        for (key, saved), cur in zip(
+                sorted(_flatten(tree["base"]).items()),
+                (v for _, v in sorted(_flatten(trainer.base_params).items()))):
+            if not np.array_equal(saved, np.asarray(cur)):
+                raise ValueError(
+                    f"checkpoint base parameters differ from the trainer's "
+                    f"(leaf {key!r}): the trainer must be constructed with "
+                    f"the same model init (same seed/config) as the saved "
+                    f"run")
     all_ids = np.arange(trainer.store.num_clients)
     trainer.server = dataclasses.replace(
         trainer.server,
@@ -143,3 +175,49 @@ def load_trainer(path: str, trainer):
     if engine is not None:
         engine.restore(tree["async"], extra["async"])
     return trainer
+
+
+def _nest_flat(flat: Dict[str, np.ndarray], prefix: str):
+    """Rebuild the nested tree stored under ``prefix`` from the flat
+    "/"-joined archive keys, template-free: dict levels whose keys are
+    all digits become lists (the round-trip of ``_flatten`` over the
+    dict/list trees this repo checkpoints). Delta-tree keys escape "/"
+    to "." (core/update_space.py), so the split is unambiguous."""
+    pre = prefix + "/"
+    sub = {k[len(pre):]: v for k, v in flat.items() if k.startswith(pre)}
+    if not sub:
+        raise KeyError(f"checkpoint has no tree under {prefix!r}")
+    root: Dict[str, Any] = {}
+    for key, arr in sub.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        node = {k: listify(v) for k, v in node.items()}
+        if node and all(k.isdigit() for k in node):
+            return [node[str(i)] for i in range(len(node))]
+        return node
+
+    return listify(root)
+
+
+def load_serving_params(path: str):
+    """The *full* serving parameter pytree of a ``save_trainer``
+    checkpoint: the frozen base with the trained deltas merged through
+    ``update_space.apply`` (DESIGN.md §17) — or ``x`` itself when the
+    run trained in the identity ``full`` space. Needs no trainer, spec,
+    or model config: the update-space selection metadata rides in the
+    checkpoint (``launch/serve.py --checkpoint``)."""
+    from repro.core.update_space import spec_from_meta
+
+    flat, extra = _read_checkpoint(path)
+    x = _nest_flat(flat, "x")
+    space, shim = spec_from_meta(extra.get("update_space"))
+    if not space.trains_subset:
+        return x
+    return space.apply(shim, _nest_flat(flat, "base"), x)

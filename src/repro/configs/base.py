@@ -224,6 +224,20 @@ class FedRoundSpec:
     clip_norm: float = 0.0
     noise_multiplier: float = 0.0
     dp_delta: float = 1e-5
+    # beyond-paper: parameter-efficient federated updates, a name in the
+    # repro.core.update_space registry (full | lora | head_only —
+    # DESIGN.md §17). "full" (also resolved from "") is the identity:
+    # the engine trains the whole parameter pytree, bit-for-bit the
+    # pre-registry path. Any other space freezes the base parameters at
+    # round 0 and makes ``server.x`` the trainable-delta pytree, so c,
+    # c_i, residuals, solver slots, store rows and bytes_up/bytes_down
+    # all shrink to delta shape. ``update_targets`` is a comma-separated
+    # fnmatch pattern list over escaped leaf paths ("" = the lora
+    # defaults; required for head_only).
+    update_space: str = ""
+    lora_rank: int = 0
+    lora_alpha: float = 0.0
+    update_targets: str = ""
     # beyond-paper perf: fuse the whole K-step local loop into ONE Pallas
     # kernel per dtype group per round
     # (kernels/scaffold_update/megakernel.py, DESIGN.md §15). Like
@@ -245,6 +259,10 @@ class FedRoundSpec:
         from repro.core.compression import compressor_names
         from repro.core.local_solver import local_solver_names
         from repro.core.privatizer import get_privatizer, privatizer_names
+        from repro.core.update_space import (
+            get_update_space,
+            update_space_names,
+        )
         from repro.optim.schedules import schedule_names
 
         assert self.algorithm in algorithm_names(), (
@@ -318,6 +336,34 @@ class FedRoundSpec:
             assert self.noise_multiplier == 0.0, (
                 f"noise_multiplier={self.noise_multiplier} has no effect "
                 f"for privatizer={self.privatizer!r}")
+        if self.update_space == "":
+            object.__setattr__(self, "update_space", "full")
+        assert self.update_space in update_space_names(), (
+            self.update_space, update_space_names())
+        space = get_update_space(self.update_space)
+        if space.uses_rank:
+            # rank-0 degeneracy (an adapter that trains nothing) is
+            # rejected loudly here, before any engine state is built
+            assert self.lora_rank >= 1, (
+                f"update_space={self.update_space!r} needs lora_rank >= 1, "
+                f"got {self.lora_rank}")
+            assert self.lora_alpha >= 0.0, self.lora_alpha
+        else:
+            # selection knobs of the other spaces must not dangle
+            assert self.lora_rank == 0, (
+                f"lora_rank={self.lora_rank} has no effect for "
+                f"update_space={self.update_space!r}")
+            assert self.lora_alpha == 0.0, (
+                f"lora_alpha={self.lora_alpha} has no effect for "
+                f"update_space={self.update_space!r}")
+        if space.requires_targets:
+            assert self.update_targets != "", (
+                f"update_space={self.update_space!r} needs update_targets "
+                f"(an empty selection trains nothing)")
+        if not space.trains_subset:
+            assert self.update_targets == "", (
+                f"update_targets={self.update_targets!r} has no effect for "
+                f"update_space={self.update_space!r}")
         algo = get_algorithm(self.algorithm)
         if (self.server_optimizer == "" and self.server_momentum == 0.0
                 and algo.default_server_optimizer == "momentum"):

@@ -14,12 +14,12 @@ Entry points:
   FederatedTrainer — host controller (sampling + stateful-client stores;
                      sync / pipelined / scanned / async execution modes)
 
-Extensibility (DESIGN.md §9/§11/§12/§13/§14/§16) — eight registries,
+Extensibility (DESIGN.md §9/§11/§12/§13/§14/§16/§17) — nine registries,
 each listable (``algorithm_names`` / ``server_optimizer_names`` /
 ``compressor_names`` / ``local_solver_names`` / ``store_backend_names``
 / ``availability_names`` / ``staleness_weighting_names`` /
-``privatizer_names``; ``launch/train.py --list-registries`` prints all
-eight):
+``privatizer_names`` / ``update_space_names``;
+``launch/train.py --list-registries`` prints all nine):
   Algorithm / register_algorithm            — per-round algorithm strategy
   ServerOptimizer / register_server_optimizer — server step on the
                                               aggregated delta
@@ -52,6 +52,13 @@ eight):
                                               round metrics (clip ->
                                               compress -> aggregate;
                                               DESIGN.md §16)
+  UpdateSpace / register_update_space       — parameter-efficient
+                                              federated updates: the map
+                                              between the full parameter
+                                              pytree and the trainable-
+                                              delta pytree the engine
+                                              trains (full / lora /
+                                              head_only; DESIGN.md §17)
 """
 from repro.core.api import (  # noqa: F401
     Algorithm,
@@ -138,4 +145,14 @@ from repro.core.sampling import (  # noqa: F401
     ClientSampler,
     DeviceClientSampler,
     device_sample_ids,
+)
+from repro.core.update_space import (  # noqa: F401
+    FullSpace,
+    HeadOnlySpace,
+    LoRASpace,
+    UpdateSpace,
+    get_update_space,
+    register_update_space,
+    resolve_update_space,
+    update_space_names,
 )

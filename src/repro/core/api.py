@@ -8,6 +8,11 @@ instead of string `if/elif` chains and variable-arity tuples:
   ServerState       everything the server owns between rounds: the model
                     ``x``, the server control variate ``c``, and the
                     server-optimizer slots (momentum / Adam moments).
+                    Under a non-identity ``UpdateSpace`` (DESIGN.md §17)
+                    ``x`` is the trainable-*delta* pytree against a
+                    frozen base held by the controller; everything here
+                    — including both scanned engines' store rows — is
+                    generic over that tree.
   ClientRoundState  the sampled clients' round-scoped state: their
                     control variates ``c_i`` (leaves ``(S, ...)``),
                     uplink error-feedback residuals, and aggregation

@@ -524,6 +524,8 @@ class AsyncBufferedEngine:
         self._last_agg_clock = self.sim.clock
         if tr.megakernel_fallback_reason is not None:
             out["megakernel_fallback_reason"] = tr.megakernel_fallback_reason
+        if tr.update_space.trains_subset:
+            out["update_space"] = tr.update_space.name
         tr.history.append(out)
         return out
 

@@ -93,9 +93,11 @@ from repro.core.store import (  # noqa: F401  (ClientStateStore re-exported)
     stale_mask,
 )
 from repro.core.tree import tree_cast
+from repro.core.update_space import get_update_space, resolve_update_space
 
 
-def make_grad_fn(loss_fn: Callable) -> Callable:
+def make_grad_fn(loss_fn: Callable, *, space=None, spec=None,
+                 base_params=None) -> Callable:
     """``loss_fn(params, batch) -> (scalar, metrics)``  =>
     ``grad_fn(params, batch) -> (grads, metrics)``.
 
@@ -103,7 +105,29 @@ def make_grad_fn(loss_fn: Callable) -> Callable:
     gradient is expressible inside the K-step megakernel advertise it —
     ``data.quadratics.quadratic_loss``) so
     ``local_solver.megakernel_incompatibility`` can gate on the grad fn
-    it actually receives."""
+    it actually receives.
+
+    With a non-identity ``space`` (an :class:`~repro.core.update_space.
+    UpdateSpace`, DESIGN.md §17) the returned function differentiates in
+    *delta* space: ``grad_fn(deltas, batch)`` evaluates the loss at
+    ``space.apply(spec, base_params, deltas)`` and pulls the full-space
+    cotangent back through ``space.grad_project`` — the exact chain
+    rule, so every engine trains the delta pytree unchanged. The
+    megakernel marker is dropped there (the delta-space gradient is no
+    longer the loss's closed form), which surfaces as a clean
+    ``megakernel_fallback_reason``."""
+
+    if space is not None and space.trains_subset:
+
+        def grad_fn(deltas, batch):
+            full = space.apply(spec, base_params, deltas)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(full, batch)
+            return space.grad_project(spec, base_params, deltas, grads), \
+                metrics
+
+        grad_fn.megakernel_grad = None
+        return grad_fn
 
     def grad_fn(params, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -203,7 +227,23 @@ class FederatedTrainer:
                 "spec.weighted_aggregation=True needs the dataset to expose "
                 "client_sizes(ids); add it or disable weighting")
         key = jax.random.key(seed)
-        self.server = init_server_state(spec, init_params(key))
+        # update space (DESIGN.md §17): with a non-identity space the
+        # full parameters are frozen as self.base_params and server.x
+        # becomes the trainable-delta pytree — everything templated off
+        # it below (c, c_i, residuals, solver slots, store row families,
+        # comm-bytes accounting) is delta-shaped automatically. The
+        # adapter init draws from the fifth counter-based stream
+        # (key(seed+4)), so full-space RNG consumption is untouched.
+        self.update_space = get_update_space(resolve_update_space(spec))
+        full_init = init_params(key)
+        if self.update_space.trains_subset:
+            self.base_params = full_init
+            self.server = init_server_state(
+                spec, self.update_space.init_deltas(
+                    spec, full_init, jax.random.key(seed + 4)))
+        else:
+            self.base_params = None
+            self.server = init_server_state(spec, full_init)
         # tiered population store (DESIGN.md §13): rows live host-side in a
         # pluggable StoreBackend; one worker thread serialises all backend
         # I/O across the row families so gather-ahead repairs stay ordered
@@ -262,7 +302,8 @@ class FederatedTrainer:
             k: float(v) for k, v in round_comm_bytes(
                 spec, self.server.x,
                 stateful_clients=self.algorithm.stateful_clients).items()}
-        grad_fn = make_grad_fn(loss_fn)
+        grad_fn = make_grad_fn(loss_fn, space=self.update_space, spec=spec,
+                               base_params=self.base_params)
         # the async engine re-derives the per-dispatch client phase from
         # these (core/async_engine.py — DESIGN.md §14)
         self._grad_fn = grad_fn
@@ -448,6 +489,17 @@ class FederatedTrainer:
     @c.setter
     def c(self, value):
         self.server = dataclasses.replace(self.server, c=value)
+
+    def eval_params(self):
+        """The *full* parameter pytree for evaluation/serving: the frozen
+        base with the trained deltas merged in (``update_space.apply``).
+        In the identity ``full`` space this is ``server.x`` itself — the
+        same arrays, so the eval path is bit-for-bit the pre-registry
+        one."""
+        if self.base_params is None:
+            return self.server.x
+        return self.update_space.apply(self.spec, self.base_params,
+                                       self.server.x)
 
     @property
     def momentum(self):
@@ -783,6 +835,8 @@ class FederatedTrainer:
             if self.megakernel_fallback_reason is not None:
                 m["megakernel_fallback_reason"] = (
                     self.megakernel_fallback_reason)
+            if self.update_space.trains_subset:
+                m["update_space"] = self.update_space.name
             m["round"] = self.round_idx
             self.history.append(m)
             out.append(m)
@@ -834,6 +888,8 @@ class FederatedTrainer:
                 self.spec, self.round_idx)
         if self.megakernel_fallback_reason is not None:
             out["megakernel_fallback_reason"] = self.megakernel_fallback_reason
+        if self.update_space.trains_subset:
+            out["update_space"] = self.update_space.name
         out["round"] = self.round_idx
         self.history.append(out)
         return out
@@ -857,7 +913,7 @@ class FederatedTrainer:
                 done += chunk
                 if (eval_fn is not None and eval_every
                         and done % eval_every == 0):
-                    em = eval_fn(self.x)
+                    em = eval_fn(self.eval_params())
                     m.update(em)
                     if verbose:
                         print(f"round {done}: {m}")
@@ -868,7 +924,7 @@ class FederatedTrainer:
         for r in range(rounds):
             m = self.run_round()
             if eval_fn is not None and eval_every and (r + 1) % eval_every == 0:
-                em = eval_fn(self.x)
+                em = eval_fn(self.eval_params())
                 m.update(em)
                 if verbose:
                     print(f"round {r+1}: {m}")

@@ -18,6 +18,14 @@ program — the controller (repro.core.controller) scatters the returned
 ``c_i`` back into the host store, matching the paper's stateful-client
 semantics.
 
+The round is generic over the ``server.x`` pytree: under a non-identity
+``UpdateSpace`` (DESIGN.md §17) ``x`` is the *trainable-delta* tree
+(LoRA factors / head subtrees), ``grad_fn`` differentiates in that
+space (``make_grad_fn(space=...)``), and ``c``/``c_i``/residuals/solver
+slots — all templated off ``x`` — are delta-shaped with it. Nothing in
+this module branches on the space; broadcast and uplink payloads (and
+so ``round_comm_bytes``) shrink to the delta automatically.
+
 ``use_fused_update=True`` routes every local step's update arithmetic
 through the packed Pallas path (one kernel launch per dtype group per
 step — DESIGN.md §8). It matches its fp32-accumulating oracle

@@ -1,0 +1,349 @@
+"""UpdateSpace registry (DESIGN.md §17): the ninth pluggable strategy —
+a map between the *full* parameter pytree and the *trainable-delta*
+pytree the federated engine actually operates on.
+
+The SCAFFOLD engine (all four execution modes) is generic over the
+server-state pytree ``server.x``: control variates ``c, c_i``,
+error-feedback residuals, local-solver slots, the (N, ...) client-store
+row families, partition specs, and the ``bytes_up/bytes_down``
+accounting all template off it. An ``UpdateSpace`` exploits exactly
+that: the trainer freezes the *base* parameters once, makes ``server.x``
+the delta tree returned by ``init_deltas``, and wraps the gradient as
+
+    grad(deltas) = grad_project(base, deltas, dLoss/dW |_{W=apply(base, deltas)})
+
+— the chain rule through ``apply``, so ``make_grad_fn`` differentiates
+in delta space and every engine, codec, privatizer, and store shrinks
+with the delta payload *without touching any engine math*. Built-ins:
+
+  full       identity — deltas ARE the parameters, no base; bit-for-bit
+             the pre-registry trajectory (the trainer skips the wrapper
+             entirely, so even the jit cache keys are unchanged).
+  lora       per-dense-layer low-rank factors: every targeted weight
+             ``W (…, in, out)`` gets ``A (…, in, r)`` / ``B (…, r, out)``
+             and serves merged, ``W + (alpha/r) · A @ B`` (Hu et al.,
+             arXiv:2106.09685). A is Gaussian (1/sqrt(in) scale), B is
+             zero, so ``apply(base, init_deltas(...)) == base`` while A's
+             gradient is nonzero from step one (A=B=0 is a saddle).
+  head_only  train only the named subtrees (e.g. ``unembed,ln_final``),
+             freeze the rest — linear probing / personalization heads.
+
+Delta trees are flat ``{escaped_path: leaf-or-factor-dict}`` dicts with
+"/" escaped to "." in the path keys, so checkpoint flattening
+(checkpoint.py joins key-paths with "/") stays unambiguous and
+template-free serving can re-nest them (``launch/serve.py``).
+
+Register a custom space with :func:`register_update_space`; specs select
+one by name via ``FedRoundSpec(update_space=...)`` and
+:func:`resolve_update_space`.
+"""
+from __future__ import annotations
+
+import fnmatch
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# dense-layer leaf names of models/layers.py matmuls (attention +
+# MLP/MoE); the default LoRA targets. MLA's factored projections
+# (wq_a/wq_b/...) are already low-rank and are not targeted by default.
+DEFAULT_LORA_TARGETS: Tuple[str, ...] = (
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+_SEP = "."  # path separator inside delta keys ("/" is the checkpoint's)
+
+
+def leaf_paths(tree) -> List[Tuple[str, Any]]:
+    """``(escaped_path, leaf)`` pairs, paths "/"-joined then escaped to
+    ".", matching the checkpoint flat-key convention."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key.replace("/", _SEP), leaf))
+    return out
+
+
+def _matches(path: str, patterns: Sequence[str]) -> bool:
+    """fnmatch against the full escaped path and its final component."""
+    name = path.rsplit(_SEP, 1)[-1]
+    return any(fnmatch.fnmatch(path, pat) or fnmatch.fnmatch(name, pat)
+               for pat in patterns)
+
+
+def _set_by_path(tree, path: str, value):
+    """Functionally replace the leaf at an escaped path in a nested
+    dict/list tree (returns a copy; shared untouched subtrees)."""
+    parts = path.split(_SEP)
+
+    def rec(node, i):
+        part = parts[i]
+        if isinstance(node, (list, tuple)):
+            idx = int(part)
+            new = list(node)
+            new[idx] = value if i == len(parts) - 1 else rec(node[idx], i + 1)
+            return type(node)(new) if isinstance(node, tuple) else new
+        new = dict(node)
+        new[part] = value if i == len(parts) - 1 else rec(node[part], i + 1)
+        return new
+
+    return rec(tree, 0)
+
+
+class UpdateSpace:
+    """Base class: a named map full-params <-> trainable deltas.
+
+    Subclasses set ``name``/``trains_subset`` and implement the three
+    protocol methods. ``grad_project`` has a generic vjp default (the
+    exact chain rule through ``apply``); built-ins override it with the
+    closed form.
+    """
+
+    name = "base"
+    #: False only for the identity space — engines/serving may then skip
+    #: the merge entirely (deltas ARE the parameters).
+    trains_subset = True
+    #: the space consumes spec.lora_rank / spec.lora_alpha (validation:
+    #: rank required here, rejected elsewhere)
+    uses_rank = False
+    #: the space needs a non-empty spec.update_targets selection
+    requires_targets = False
+
+    def init_deltas(self, spec, params, key=None):
+        """The round-0 delta pytree for ``params`` (shapes/dtypes define
+        every engine state templated off ``server.x``). Must satisfy
+        ``apply(spec, params, init_deltas(...)) == params``."""
+        raise NotImplementedError
+
+    def apply(self, spec, base, deltas):
+        """Merge: the full parameter pytree the model forward consumes."""
+        raise NotImplementedError
+
+    def grad_project(self, spec, base, deltas, full_grads):
+        """Pull a full-space gradient cotangent back to delta space:
+        ``(d apply / d deltas)^T @ full_grads`` — the exact chain rule,
+        so differentiating ``loss(apply(base, deltas))`` via this equals
+        differentiating through ``apply`` directly."""
+        _, vjp = jax.vjp(lambda d: self.apply(spec, base, d), deltas)
+        return vjp(full_grads)[0]
+
+    def num_params(self, deltas) -> int:
+        """Trainable scalar count of a delta tree."""
+        return sum(int(x.size) for x in jax.tree_util.tree_leaves(deltas))
+
+    def checkpoint_meta(self, spec) -> Dict[str, Any]:
+        """JSON-serializable selection metadata a checkpoint records so
+        serving can rebuild this space without the training config."""
+        return {"name": self.name}
+
+
+class FullSpace(UpdateSpace):
+    """Identity: deltas are the full parameters, base is unused. The
+    trainer special-cases this space (no frozen base, unwrapped grad fn)
+    so the trajectory — and the jit cache — is bit-for-bit the
+    pre-registry path."""
+
+    name = "full"
+    trains_subset = False
+
+    def init_deltas(self, spec, params, key=None):
+        return params
+
+    def apply(self, spec, base, deltas):
+        return deltas
+
+    def grad_project(self, spec, base, deltas, full_grads):
+        return full_grads
+
+
+def _target_patterns(spec) -> Tuple[str, ...]:
+    raw = getattr(spec, "update_targets", "") or ""
+    pats = tuple(p.strip() for p in raw.split(",") if p.strip())
+    return pats
+
+
+class LoRASpace(UpdateSpace):
+    """Low-rank adapters on the targeted dense weights.
+
+    Selection: ``spec.update_targets`` (comma-separated fnmatch
+    patterns, matched against the escaped leaf path and its final
+    component) — empty means :data:`DEFAULT_LORA_TARGETS`. Every
+    targeted leaf must be a matmul weight with ndim >= 2; its trailing
+    two axes are (in, out) and any leading axes (stacked scan layers,
+    MoE experts) batch the factors.
+
+    Delta tree: ``{path: {"A": (…, in, r) f32, "B": (…, r, out) f32}}``.
+    Merged forward: ``W + (alpha/r) · A @ B`` cast back to W's dtype —
+    one batched matmul per target at apply time, so the model code and
+    the packed-kernel dispatch see ordinary full-shaped weights.
+    """
+
+    name = "lora"
+    uses_rank = True
+
+    def _rank_alpha(self, spec) -> Tuple[int, float]:
+        rank = int(getattr(spec, "lora_rank", 0) or 0)
+        if rank <= 0:
+            raise ValueError(
+                "update_space='lora' needs lora_rank >= 1 (rank 0 would "
+                "train nothing — pass --lora-rank / FedRoundSpec.lora_rank)")
+        alpha = float(getattr(spec, "lora_alpha", 0.0) or rank)
+        return rank, alpha
+
+    def targets(self, spec, params) -> List[Tuple[str, Any]]:
+        pats = _target_patterns(spec) or DEFAULT_LORA_TARGETS
+        hits = [(path, leaf) for path, leaf in leaf_paths(params)
+                if _matches(path, pats)]
+        if not hits:
+            raise ValueError(
+                f"update_space='lora' matched no parameters: patterns "
+                f"{pats} vs leaves "
+                f"{[p for p, _ in leaf_paths(params)]}")
+        bad = [(p, jnp.shape(l)) for p, l in hits if jnp.ndim(l) < 2]
+        if bad:
+            raise ValueError(
+                f"lora targets must be >=2-D matmul weights, got {bad}; "
+                f"narrow update_targets")
+        return hits
+
+    def init_deltas(self, spec, params, key=None):
+        rank, _ = self._rank_alpha(spec)
+        hits = self.targets(spec, params)
+        if key is None:
+            key = jax.random.key(0)
+        deltas = {}
+        for i, (path, leaf) in enumerate(hits):
+            shape = jnp.shape(leaf)
+            d_in, d_out = shape[-2], shape[-1]
+            lead = shape[:-2]
+            a = jax.random.normal(
+                jax.random.fold_in(key, i), lead + (d_in, rank),
+                jnp.float32) / jnp.sqrt(jnp.float32(d_in))
+            b = jnp.zeros(lead + (rank, d_out), jnp.float32)
+            deltas[path] = {"A": a, "B": b}
+        return deltas
+
+    def apply(self, spec, base, deltas):
+        rank, alpha = self._rank_alpha(spec)
+        scale = alpha / rank
+        merged = base
+        for path, fac in deltas.items():
+            w = next(l for p, l in leaf_paths(base) if p == path)
+            upd = scale * jnp.matmul(
+                fac["A"].astype(jnp.float32), fac["B"].astype(jnp.float32))
+            merged = _set_by_path(
+                merged, path, (w.astype(jnp.float32) + upd).astype(w.dtype))
+        return merged
+
+    def grad_project(self, spec, base, deltas, full_grads):
+        rank, alpha = self._rank_alpha(spec)
+        scale = alpha / rank
+        flat_g = dict(leaf_paths(full_grads))
+        out = {}
+        for path, fac in deltas.items():
+            g = flat_g[path].astype(jnp.float32)
+            a = fac["A"].astype(jnp.float32)
+            b = fac["B"].astype(jnp.float32)
+            out[path] = {
+                "A": scale * jnp.matmul(g, jnp.swapaxes(b, -1, -2)),
+                "B": scale * jnp.matmul(jnp.swapaxes(a, -1, -2), g),
+            }
+        return out
+
+    def checkpoint_meta(self, spec) -> Dict[str, Any]:
+        rank, alpha = self._rank_alpha(spec)
+        return {"name": self.name, "lora_rank": rank, "lora_alpha": alpha,
+                "update_targets": getattr(spec, "update_targets", "") or ""}
+
+
+class HeadOnlySpace(UpdateSpace):
+    """Train only the leaves matching ``spec.update_targets`` (full
+    shape, full precision); freeze everything else. The delta leaves are
+    absolute replacement values, not offsets, so ``apply`` is a leaf
+    substitution — linear probing / personalized heads."""
+
+    name = "head_only"
+    requires_targets = True
+
+    def targets(self, spec, params) -> List[Tuple[str, Any]]:
+        pats = _target_patterns(spec)
+        if not pats:
+            raise ValueError(
+                "update_space='head_only' needs update_targets (e.g. "
+                "'unembed*,ln_final*') — an empty selection trains nothing")
+        hits = [(path, leaf) for path, leaf in leaf_paths(params)
+                if _matches(path, pats)]
+        if not hits:
+            raise ValueError(
+                f"update_space='head_only' matched no parameters: patterns "
+                f"{pats} vs leaves {[p for p, _ in leaf_paths(params)]}")
+        return hits
+
+    def init_deltas(self, spec, params, key=None):
+        return {path: leaf for path, leaf in self.targets(spec, params)}
+
+    def apply(self, spec, base, deltas):
+        merged = base
+        for path, leaf in deltas.items():
+            merged = _set_by_path(merged, path, leaf)
+        return merged
+
+    def grad_project(self, spec, base, deltas, full_grads):
+        flat_g = dict(leaf_paths(full_grads))
+        return {path: flat_g[path] for path in deltas}
+
+    def checkpoint_meta(self, spec) -> Dict[str, Any]:
+        return {"name": self.name,
+                "update_targets": getattr(spec, "update_targets", "") or ""}
+
+
+# ---------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------
+
+_UPDATE_SPACES: Dict[str, UpdateSpace] = {}
+
+
+def register_update_space(space: UpdateSpace) -> UpdateSpace:
+    """Register an update space instance under ``space.name``."""
+    assert space.name and space.name != "base", space.name
+    _UPDATE_SPACES[space.name] = space
+    return space
+
+
+def get_update_space(name: str) -> UpdateSpace:
+    if name not in _UPDATE_SPACES:
+        raise KeyError(
+            f"unknown update space {name!r}; known: {update_space_names()}")
+    return _UPDATE_SPACES[name]
+
+
+def update_space_names() -> List[str]:
+    return sorted(_UPDATE_SPACES)
+
+
+def resolve_update_space(spec) -> str:
+    """The spec's update-space name ('' / missing -> 'full')."""
+    return getattr(spec, "update_space", "") or "full"
+
+
+def spec_from_meta(meta: Optional[Dict[str, Any]]):
+    """(space, spec-like) from checkpoint metadata written by
+    ``UpdateSpace.checkpoint_meta`` — what ``launch/serve.py`` needs to
+    merge a base+deltas checkpoint without the training config."""
+    from types import SimpleNamespace
+
+    meta = meta or {"name": "full"}
+    space = get_update_space(meta["name"])
+    shim = SimpleNamespace(
+        update_space=meta["name"],
+        lora_rank=int(meta.get("lora_rank", 0) or 0),
+        lora_alpha=float(meta.get("lora_alpha", 0.0) or 0.0),
+        update_targets=meta.get("update_targets", ""))
+    return space, shim
+
+
+register_update_space(FullSpace())
+register_update_space(LoRASpace())
+register_update_space(HeadOnlySpace())

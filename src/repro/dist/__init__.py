@@ -40,7 +40,12 @@ def _spec_tree(shapes, mesh, strategy, *, lead_dims: int = 0,
 
     def mk(path, leaf):
         ps = _path_str(path)
-        stack = lead_dims + (1 if ps.startswith("layers/") else 0)
+        # "layers/..." = nested model params; "layers.<i>..." = flat
+        # delta-tree keys (core/update_space.py escapes "/" to "."), e.g.
+        # a stacked-layer LoRA factor "layers.0.wq/A" with leaves
+        # (L, in, r) — both carry the layer-stack leading dim
+        stacked = ps.startswith("layers/") or ps.startswith("layers.")
+        stack = lead_dims + (1 if stacked else 0)
         spec = param_partition_spec(ps, leaf.shape, mesh, strategy,
                                     lead_stack_dims=stack)
         entries = list(spec)
@@ -58,7 +63,10 @@ def _to_sharding(spec_tree, mesh):
 
 
 def partition_params(shapes, mesh, strategy, *, expert_parallel: bool = False):
-    """NamedSharding tree for the server/client model state (x, c, y)."""
+    """NamedSharding tree for the server/client model state (x, c, y).
+    The rules are shape-driven, so a non-identity update space's delta
+    pytree (LoRA A/B factors, head_only subtrees — DESIGN.md §17) shards
+    by the same logic as the full parameters it replaces."""
     del expert_parallel  # experts ride the "model" axis in this layer
     return _to_sharding(_spec_tree(shapes, mesh, strategy), mesh)
 

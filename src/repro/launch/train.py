@@ -28,6 +28,7 @@ from repro.core import (
     server_optimizer_names,
     staleness_weighting_names,
     store_backend_names,
+    update_space_names,
 )
 from repro.optim.schedules import schedule_names
 from repro.data import SyntheticLMFederated
@@ -90,10 +91,28 @@ def main(argv=None):
                          "megakernel_fallback_reason in round metrics "
                          "(DESIGN.md §15)")
     ap.add_argument("--list-registries", action="store_true",
-                    help="print the eight strategy registries (algorithms, "
+                    help="print the nine strategy registries (algorithms, "
                          "server optimizers, compressors, local solvers, "
                          "store backends, availability models, staleness "
-                         "weightings, privatizers) and exit")
+                         "weightings, privatizers, update spaces) and exit")
+    ap.add_argument("--update-space", default="",
+                    choices=[""] + list(update_space_names()),
+                    help="parameter-efficient update space ('' = full): "
+                         "the engine trains a delta pytree (lora adapters / "
+                         "head_only subtrees) against frozen base weights — "
+                         "c, c_i, residuals, store rows and bytes_up/down "
+                         "all shrink to delta shape (DESIGN.md §17)")
+    ap.add_argument("--lora-rank", type=int, default=0,
+                    help="adapter rank r of --update-space lora "
+                         "(required there, rejected elsewhere)")
+    ap.add_argument("--lora-alpha", type=float, default=0.0,
+                    help="lora scaling alpha (0 = alpha := rank, i.e. "
+                         "scale 1)")
+    ap.add_argument("--lora-targets", default="",
+                    help="comma-separated fnmatch patterns over parameter "
+                         "paths selecting the adapted/trained leaves "
+                         "('' = the dense-matmul defaults for lora; "
+                         "required for head_only)")
     ap.add_argument("--weighted", action="store_true",
                     help="paper §2 weighted aggregation by client sizes")
     ap.add_argument("--compress", default="none",
@@ -196,6 +215,7 @@ def main(argv=None):
             ("availability_models", availability_names()),
             ("staleness_weightings", staleness_weighting_names()),
             ("privatizers", privatizer_names()),
+            ("update_spaces", update_space_names()),
         ):
             print(f"{title}: {' '.join(names)}")
         return None
@@ -224,6 +244,10 @@ def main(argv=None):
         clip_norm=args.clip_norm,
         noise_multiplier=args.noise_multiplier,
         dp_delta=args.dp_delta,
+        update_space=args.update_space,
+        lora_rank=args.lora_rank,
+        lora_alpha=args.lora_alpha,
+        update_targets=args.lora_targets,
     )
     data = SyntheticLMFederated(args.clients, cfg.vocab_size, args.seq_len,
                                 heterogeneity=args.heterogeneity,
@@ -258,6 +282,12 @@ def main(argv=None):
         staleness_weighting=args.staleness_weighting,
         staleness_kwargs=staleness_kwargs,
     )
+    if trainer.update_space.trains_subset:
+        n_train = trainer.update_space.num_params(trainer.server.x)
+        print(f"update space: {trainer.update_space.name} — "
+              f"{n_train/1e6:.3f}M trainable of {n_params/1e6:.1f}M "
+              f"({n_params/max(n_train, 1):.0f}x fewer), per-round "
+              f"up={trainer._comm_bytes['bytes_up']/1e6:.2f}MB")
     if trainer.async_active:
         eng = trainer.async_engine
         print(f"async engine: aggregate {eng.buffer_size} of "
@@ -298,7 +328,7 @@ def main(argv=None):
         trainer.run(target - done)
         done = target
         m = trainer.history[-1]
-        ev = float(eval_loss(trainer.x, eval_batch))
+        ev = float(eval_loss(trainer.eval_params(), eval_batch))
         print(f"round {done:4d} loss={m['loss']:.4f} eval={ev:.4f} "
               f"drift={m['drift']:.3e} "
               f"up={m['bytes_up']/1e6:.2f}MB down={m['bytes_down']/1e6:.2f}MB "
